@@ -1,0 +1,19 @@
+"""Paper Table 2: UNIQ accuracy vs (weight, activation) bitwidth on the
+CIFAR-scale protocol (w in {2,4,32} x a in {4,8,32}, scaled down)."""
+
+from repro.cnn.train import CNNExperiment, run_experiment
+
+BASE = dict(model="resnet18", width=8, steps=300, batch=64, lr=3e-3,
+            noise=1.5, seed=0, n_stages=4)
+
+
+def run():
+    rows = []
+    for w_bits in [2, 4, 32]:
+        for a_bits in [4, 8, 32]:
+            r = run_experiment(CNNExperiment(w_bits=w_bits, a_bits=a_bits,
+                                             **BASE))
+            rows.append((f"table2/w{w_bits}a{a_bits}",
+                         r["train_time_s"] * 1e6,
+                         f"acc={r['accuracy']:.3f}"))
+    return rows

@@ -1,0 +1,44 @@
+"""Paper Table 1 / Figure 1: complexity-accuracy tradeoff in BOPs.
+
+Reproduces the BOPs methodology rows for the paper's own models (cross-
+checked against Table 1 in tests) and extends the metric to all 10
+assigned LM architectures (per-token BOPs at several UNIQ bitwidths).
+"""
+
+import time
+
+from repro.configs import base as cb
+from repro.core import bops
+
+PAPER_ROWS = [
+    # (arch, builder, bits_w, bits_a, paper_gbops, paper_acc)
+    ("ResNet-18", bops.resnet18_imagenet, 32, 32, 1920, 69.60),
+    ("ResNet-18", bops.resnet18_imagenet, 4, 8, 93.2, 67.02),
+    ("ResNet-18", bops.resnet18_imagenet, 5, 8, 113, 68.00),
+    ("MobileNet", bops.mobilenet_v1_imagenet, 32, 32, 626, 68.20),
+    ("MobileNet", bops.mobilenet_v1_imagenet, 4, 8, 25.1, 66.00),
+    ("MobileNet", bops.mobilenet_v1_imagenet, 5, 8, 30.5, 67.50),
+    ("MobileNet", bops.mobilenet_v1_imagenet, 8, 8, 46.7, 68.25),
+]
+
+
+def run():
+    rows = []
+    for name, builder, bw, ba, paper_gbops, paper_acc in PAPER_ROWS:
+        t0 = time.perf_counter()
+        mb = builder(bw, ba)
+        us = (time.perf_counter() - t0) * 1e6
+        rows.append((f"bops_table1/{name}_w{bw}a{ba}", us,
+                     f"gbops={mb.gbops:.1f};paper={paper_gbops};"
+                     f"size_mbit={mb.model_size_mbit:.1f};"
+                     f"paper_acc={paper_acc}"))
+    for arch in cb.ARCH_IDS:
+        cfg = cb.get(arch)
+        for bw, ba in [(32, 32), (8, 8), (4, 8)]:
+            t0 = time.perf_counter()
+            mb = bops.lm_bops(cfg, bw, ba, tokens=1)
+            us = (time.perf_counter() - t0) * 1e6
+            rows.append((f"bops_lm/{arch}_w{bw}a{ba}", us,
+                         f"gbops_per_tok={mb.gbops:.2f};"
+                         f"size_gbit={mb.model_size_bits / 1e9:.1f}"))
+    return rows

@@ -1,0 +1,55 @@
+"""Micro-benchmarks of the quantization ops (reference path on CPU; on TPU
+the same harness times the Pallas kernels).  Derived column reports the
+modelled HBM-traffic ratio of W4 vs bf16 weights — the serving-side win."""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run():
+    rows = []
+    M, K, N = 256, 2048, 2048
+    a = jax.random.normal(jax.random.PRNGKey(0), (M, K), jnp.float32) * 0.1
+    w = jax.random.normal(jax.random.PRNGKey(1), (K, N), jnp.float32) * 0.03
+    mu = jnp.mean(w, axis=0, keepdims=True)
+    sd = jnp.std(w, axis=0, keepdims=True)
+
+    f_ref = jax.jit(lambda a, w: a @ w)
+    us = _time(f_ref, a, w)
+    rows.append((f"qmatmul/fp32_{M}x{K}x{N}", us, "bytes_w=1.0x"))
+
+    for bits in [8, 4]:
+        wp = ops.quantize_weights(w[None], mu[None], sd[None], bits=bits,
+                                  use_pallas=False)
+        wp0 = wp[0]
+        f_q = jax.jit(lambda a, wp0: ops.qmatmul(a, wp0, mu, sd, bits=bits,
+                                                 use_pallas=False))
+        us = _time(f_q, a, wp0)
+        rows.append((f"qmatmul/w{bits}_{M}x{K}x{N}", us,
+                     f"bytes_w={bits / 32:.3f}x"))
+
+    G, R, C = 4, 1024, 2048
+    wg = jax.random.normal(jax.random.PRNGKey(2), (G, R, C)) * 0.05
+    mug = jnp.mean(wg, axis=(1, 2), keepdims=True)
+    sdg = jnp.std(wg, axis=(1, 2), keepdims=True)
+    modes = jnp.ones((G,), jnp.int32)
+    key = jax.random.PRNGKey(3)
+    f_n = jax.jit(lambda w: ops.uniq_transform(w, mug, sdg, modes, key,
+                                               k=16, use_pallas=False))
+    us = _time(f_n, wg)
+    rows.append((f"uniq_noise/{G}x{R}x{C}_k16", us,
+                 f"gbps={wg.nbytes * 2 / us / 1e3:.2f}"))
+    return rows

@@ -1,0 +1,26 @@
+"""Paper Table 3: quantizer comparison under noise injection
+(k-quantile vs k-means vs uniform, 3-bit weights) + training-time ratios.
+
+The paper's claims validated here (CPU-scaled, synthetic data):
+  * accuracy:   k-quantile > {k-means, uniform}  at 3-bit
+  * train time: k-quantile overhead << k-means overhead (bin-independent
+    uniform noise vs per-bin processing + Lloyd refresh)
+"""
+
+from repro.cnn.train import CNNExperiment, run_experiment
+
+BASE = dict(model="resnet18", width=8, steps=300, batch=64, lr=3e-3,
+            noise=1.5, seed=0, n_stages=4)
+
+
+def run():
+    rows = []
+    fp = run_experiment(CNNExperiment(w_bits=32, **BASE))
+    rows.append(("table3/baseline_fp32", fp["train_time_s"] * 1e6,
+                 f"acc={fp['accuracy']:.3f}"))
+    for method in ["kquantile", "uniform", "kmeans"]:
+        r = run_experiment(CNNExperiment(w_bits=3, method=method, **BASE))
+        rows.append((f"table3/{method}_w3", r["train_time_s"] * 1e6,
+                     f"acc={r['accuracy']:.3f};"
+                     f"time_ratio={r['train_time_s'] / fp['train_time_s']:.2f}"))
+    return rows

@@ -1,0 +1,44 @@
+"""Roofline table assembly: reads the dry-run JSON artifacts
+(experiments/dryrun/*.json) and emits one row per (arch x shape x mesh)
+with the three roofline terms, dominant bottleneck, and useful-flops ratio.
+
+Run the dry-runs first:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all
+"""
+
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.environ.get("DRYRUN_DIR", "experiments/dryrun")
+
+
+def run():
+    rows = []
+    files = sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json")))
+    if not files:
+        return [("roofline/NO_DRYRUN_ARTIFACTS", 0.0,
+                 f"run repro.launch.dryrun first (dir={DRYRUN_DIR})")]
+    for path in files:
+        with open(path) as f:
+            r = json.load(f)
+        cell = f"{r['arch']}/{r['shape']}/{r['mesh']}"
+        if r["status"] == "skipped":
+            rows.append((f"roofline/{cell}", 0.0,
+                         f"SKIPPED:{r['reason'][:60]}"))
+            continue
+        if r["status"] != "ok":
+            rows.append((f"roofline/{cell}", 0.0,
+                         f"ERROR:{r.get('error', '')[:80]}"))
+            continue
+        rf = r["roofline"]
+        mf = r["model_flops"]
+        mem = r["memory"]
+        rows.append((
+            f"roofline/{cell}", rf["step_time_s"] * 1e6,
+            f"dom={rf['dominant'][:-2]};comp={rf['compute_s']:.3f}s;"
+            f"mem={rf['memory_s']:.3f}s;ici={rf['ici_s']:.3f}s;"
+            f"dcn={rf['dcn_s']:.3f}s;useful={mf['useful_ratio']:.2f};"
+            f"peakGiB={mem['peak_per_device'] / 2 ** 30:.1f};"
+            f"fits={mem['fits_hbm']}"))
+    return rows

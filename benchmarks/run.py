@@ -1,0 +1,44 @@
+"""Benchmark driver: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only table3,bops]
+
+Prints ``name,us_per_call,derived`` CSV rows (harness convention).
+"""
+
+import argparse
+import sys
+import traceback
+
+SUITES = [
+    ("bops", "benchmarks.bops_table"),          # paper Table 1 / Fig 1
+    ("kernels", "benchmarks.kernel_bench"),     # quantization ops
+    ("roofline", "benchmarks.roofline"),        # EXPERIMENTS Sec. Roofline
+    ("table3", "benchmarks.quantizer_compare"),  # paper Table 3
+    ("table2", "benchmarks.bitwidth_sweep"),    # paper Table 2
+    ("tableA1", "benchmarks.scratch_vs_finetune"),  # paper Table A.1
+    ("figB1", "benchmarks.stages_sweep"),       # paper Fig. B.1
+]
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--only", default="",
+                   help="comma-separated suite names (default: all)")
+    args = p.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    print("name,us_per_call,derived")
+    for name, module in SUITES:
+        if only and name not in only:
+            continue
+        try:
+            mod = __import__(module, fromlist=["run"])
+            for row_name, us, derived in mod.run():
+                print(f"{row_name},{us:.1f},{derived}", flush=True)
+        except Exception as e:
+            traceback.print_exc(file=sys.stderr)
+            print(f"{name}/ERROR,0.0,{e!r}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

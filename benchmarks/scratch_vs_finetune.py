@@ -1,0 +1,22 @@
+"""Paper Table A.1: training from scratch vs fine-tuning a pre-trained
+full-precision model (both should approach the FP baseline)."""
+
+from repro.cnn.train import CNNExperiment, run_experiment
+
+BASE = dict(model="resnet18", width=8, batch=64, lr=3e-3, noise=1.5,
+            seed=0, n_stages=4)
+
+
+def run():
+    rows = []
+    fp = run_experiment(CNNExperiment(w_bits=32, steps=300, **BASE))
+    rows.append(("tableA1/baseline_fp32", fp["train_time_s"] * 1e6,
+                 f"acc={fp['accuracy']:.3f}"))
+    scratch = run_experiment(CNNExperiment(w_bits=5, steps=300, **BASE))
+    rows.append(("tableA1/scratch_w5", scratch["train_time_s"] * 1e6,
+                 f"acc={scratch['accuracy']:.3f}"))
+    ft = run_experiment(CNNExperiment(
+        w_bits=5, steps=150, finetune_from=fp["params"], **BASE))
+    rows.append(("tableA1/finetune_w5", ft["train_time_s"] * 1e6,
+                 f"acc={ft['accuracy']:.3f}"))
+    return rows

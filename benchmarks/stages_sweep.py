@@ -1,0 +1,17 @@
+"""Paper Fig. B.1: accuracy vs number of gradual-quantization stages
+(fixed step budget; more/finer stages should win for deeper nets)."""
+
+from repro.cnn.train import CNNExperiment, run_experiment
+
+BASE = dict(model="resnet18", width=8, w_bits=4, a_bits=4, steps=300,
+            batch=64, lr=3e-3, noise=1.5, seed=0)
+
+
+def run():
+    rows = []
+    for n_stages in [1, 2, 4, 0]:  # 0 => one block per layer (paper best)
+        r = run_experiment(CNNExperiment(n_stages=n_stages, **BASE))
+        label = n_stages if n_stages else "per-layer"
+        rows.append((f"figB1/stages_{label}", r["train_time_s"] * 1e6,
+                     f"acc={r['accuracy']:.3f}"))
+    return rows

@@ -1,0 +1,148 @@
+"""Fault-tolerant checkpointing: atomic sharded npz save / restore with
+mesh-elastic resharding.
+
+Layout:  <dir>/step_<N>/  shard_000000.npz ... + manifest.json
+         <dir>/LATEST     (atomic pointer file, written last)
+
+Save gathers each leaf to host (process-local here; on multi-host each
+process would write its addressable shards — the manifest format already
+carries per-leaf global shapes so that path is additive).  Restore reads
+the manifest, rebuilds the pytree, and ``jax.device_put``s every leaf onto
+the *target* sharding — which may belong to a different mesh shape than
+the one that saved it (elastic re-scaling, DESIGN.md Sec. 5).
+
+Atomicity: step dirs are written under a tmp name and os.rename'd, then
+LATEST is replaced via rename — a crash mid-save never corrupts the
+previous checkpoint (restart picks up the old LATEST).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+MAX_SHARD_BYTES = 1 << 30  # 1 GiB per npz shard
+
+
+def _flatten(tree: Any):
+    from repro.core.uniq import path_str
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    return [(path_str(kp), leaf) for kp, leaf in flat], treedef
+
+
+def save(ckpt_dir: str, step: int, tree: Any, extra: Optional[dict] = None):
+    """Write a checkpoint for ``step``; returns the step directory."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    tmp = os.path.join(ckpt_dir, f".tmp_step_{step}")
+    final = os.path.join(ckpt_dir, f"step_{step}")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+
+    flat, _ = _flatten(tree)
+    manifest = {"step": step, "leaves": [], "extra": extra or {}}
+    shard: dict = {}
+    shard_bytes = 0
+    shard_idx = 0
+
+    def flush():
+        nonlocal shard, shard_bytes, shard_idx
+        if shard:
+            np.savez(os.path.join(tmp, f"shard_{shard_idx:06d}.npz"),
+                     **shard)
+            shard, shard_bytes = {}, 0
+            shard_idx += 1
+
+    for i, (path, leaf) in enumerate(flat):
+        arr = np.asarray(jax.device_get(leaf))
+        key = f"leaf_{i:06d}"
+        manifest["leaves"].append({
+            "path": path, "key": key, "shard": None,  # filled on flush
+            "shape": list(arr.shape), "dtype": str(arr.dtype)})
+        manifest["leaves"][-1]["shard"] = shard_idx
+        shard[key] = arr
+        shard_bytes += arr.nbytes
+        if shard_bytes >= MAX_SHARD_BYTES:
+            flush()
+    flush()
+
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    # atomic LATEST pointer
+    ptr_tmp = os.path.join(ckpt_dir, ".LATEST.tmp")
+    with open(ptr_tmp, "w") as f:
+        f.write(str(step))
+    os.replace(ptr_tmp, os.path.join(ckpt_dir, "LATEST"))
+    return final
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    ptr = os.path.join(ckpt_dir, "LATEST")
+    if not os.path.exists(ptr):
+        return None
+    with open(ptr) as f:
+        return int(f.read().strip())
+
+
+def restore(ckpt_dir: str, target: Any, step: Optional[int] = None,
+            shardings: Optional[Any] = None):
+    """Restore into the structure of ``target`` (a pytree of arrays or
+    ShapeDtypeStructs).  ``shardings``: optional matching pytree of
+    NamedShardings to place leaves on (elastic restore).
+
+    Returns (tree, step, extra).
+    """
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+
+    by_shard: dict = {}
+    for leaf in manifest["leaves"]:
+        by_shard.setdefault(leaf["shard"], []).append(leaf)
+    loaded = {}
+    for sid, leaves in by_shard.items():
+        with np.load(os.path.join(d, f"shard_{sid:06d}.npz")) as z:
+            for leaf in leaves:
+                loaded[leaf["path"]] = z[leaf["key"]]
+
+    flat_t, treedef = _flatten(target)
+    shard_flat = (jax.tree_util.tree_flatten(shardings)[0]
+                  if shardings is not None else [None] * len(flat_t))
+    out = []
+    for (path, tgt), shd in zip(flat_t, shard_flat):
+        if path not in loaded:
+            raise KeyError(f"checkpoint missing leaf {path!r}")
+        arr = loaded[path]
+        if tuple(arr.shape) != tuple(tgt.shape):
+            raise ValueError(f"shape mismatch for {path}: ckpt {arr.shape} "
+                             f"vs target {tgt.shape}")
+        if shd is not None:
+            out.append(jax.device_put(arr, shd))
+        else:
+            out.append(jax.numpy.asarray(arr, dtype=tgt.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out), step, manifest["extra"]
+
+
+def prune_old(ckpt_dir: str, keep: int = 3):
+    """Delete all but the newest ``keep`` step dirs (never LATEST's)."""
+    if not os.path.isdir(ckpt_dir):
+        return
+    steps = sorted(int(n.split("_")[1]) for n in os.listdir(ckpt_dir)
+                   if n.startswith("step_"))
+    cur = latest_step(ckpt_dir)
+    for s in steps[:-keep]:
+        if s != cur:
+            shutil.rmtree(os.path.join(ckpt_dir, f"step_{s}"),
+                          ignore_errors=True)

@@ -1,0 +1,167 @@
+"""CNN substrate for the paper-faithful repro: narrow ResNet-18 and a small
+MobileNet-V1-style net on 32x32 images (the paper's CIFAR-10 protocol,
+App. A uses exactly a "narrow version of ResNet-18").
+
+Pure-jnp conv stack (NHWC).  Parameters are a flat dict pytree whose paths
+work with the same UNIQ machinery as the LMs: conv kernels (kh, kw, cin,
+cout) and the fc matrix are quantized; batch-norm-free design (GroupNorm)
+keeps the fine-tune protocol simple and deterministic.
+
+``layer_names(params)`` orders the weight-bearing layers front-to-back so
+the gradual schedule's block structure matches the paper's "one layer per
+stage" strategy (Fig. B.1).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def conv_init(rng, shape):
+    fan_in = shape[0] * shape[1] * shape[2]
+    std = (2.0 / fan_in) ** 0.5
+    return jax.random.truncated_normal(rng, -2, 2, shape) * std
+
+
+def conv2d(x, w, stride=1, groups=1):
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups)
+
+
+def group_norm(x, scale, bias, groups=8, eps=1e-5):
+    B, H, W, C = x.shape
+    g = min(groups, C)
+    while C % g:
+        g -= 1
+    xg = x.reshape(B, H, W, g, C // g).astype(jnp.float32)
+    mu = jnp.mean(xg, axis=(1, 2, 4), keepdims=True)
+    var = jnp.var(xg, axis=(1, 2, 4), keepdims=True)
+    xg = (xg - mu) * jax.lax.rsqrt(var + eps)
+    x = xg.reshape(B, H, W, C)
+    return (x * scale + bias).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# narrow ResNet-18 (paper App. A)
+# --------------------------------------------------------------------------
+
+def init_resnet18(rng: Array, width: int = 16, n_classes: int = 10) -> Dict:
+    """BasicBlock x [2,2,2,2]; width 16 = 'narrow' (vs 64 standard)."""
+    keys = iter(jax.random.split(rng, 64))
+    p: Dict[str, Any] = {}
+    w = width
+
+    def norm(c):
+        return {"scale": jnp.ones((c,)), "bias": jnp.zeros((c,))}
+
+    p["conv1"] = conv_init(next(keys), (3, 3, 3, w))
+    p["norm1"] = norm(w)
+    cin = w
+    for stage, mult in enumerate([1, 2, 4, 8]):
+        cout = w * mult
+        for blk in range(2):
+            pre = f"s{stage}b{blk}"
+            stride_in = cin
+            p[f"{pre}_conv0"] = conv_init(next(keys), (3, 3, stride_in, cout))
+            p[f"{pre}_norm0"] = norm(cout)
+            p[f"{pre}_conv1"] = conv_init(next(keys), (3, 3, cout, cout))
+            p[f"{pre}_norm1"] = norm(cout)
+            if stride_in != cout:
+                p[f"{pre}_down"] = conv_init(next(keys), (1, 1, stride_in,
+                                                          cout))
+            cin = cout
+    p["fc"] = jax.random.normal(next(keys), (cin, n_classes)) * (
+        1.0 / cin) ** 0.5
+    p["fc_bias"] = jnp.zeros((n_classes,))
+    return p
+
+
+def resnet18_apply(p: Dict, x: Array, width: int = 16) -> Array:
+    w = width
+    x = conv2d(x, p["conv1"])
+    x = jax.nn.relu(group_norm(x, **p["norm1"]))
+    cin = w
+    for stage, mult in enumerate([1, 2, 4, 8]):
+        cout = w * mult
+        stride = 1 if stage == 0 else 2
+        for blk in range(2):
+            pre = f"s{stage}b{blk}"
+            s = stride if blk == 0 else 1
+            h = conv2d(x, p[f"{pre}_conv0"], stride=s)
+            h = jax.nn.relu(group_norm(h, **p[f"{pre}_norm0"]))
+            h = conv2d(h, p[f"{pre}_conv1"])
+            h = group_norm(h, **p[f"{pre}_norm1"])
+            if f"{pre}_down" in p:
+                x = conv2d(x, p[f"{pre}_down"], stride=s)
+            x = jax.nn.relu(x + h)
+            cin = cout
+    x = jnp.mean(x, axis=(1, 2))
+    return jnp.dot(x, p["fc"]) + p["fc_bias"]
+
+
+# --------------------------------------------------------------------------
+# small MobileNet-V1 (depthwise separable)
+# --------------------------------------------------------------------------
+
+MOBILENET_SPEC = [(1, 2), (2, 1), (2, 2), (4, 1), (4, 2), (8, 1), (8, 1)]
+
+
+def init_mobilenet(rng: Array, width: int = 16, n_classes: int = 10) -> Dict:
+    keys = iter(jax.random.split(rng, 64))
+    p: Dict[str, Any] = {}
+
+    def norm(c):
+        return {"scale": jnp.ones((c,)), "bias": jnp.zeros((c,))}
+
+    p["conv1"] = conv_init(next(keys), (3, 3, 3, width))
+    p["norm1"] = norm(width)
+    cin = width
+    for i, (mult, _stride) in enumerate(MOBILENET_SPEC):
+        cout = width * mult
+        p[f"dw{i}"] = conv_init(next(keys), (3, 3, 1, cin))
+        p[f"dw{i}_norm"] = norm(cin)
+        p[f"pw{i}"] = conv_init(next(keys), (1, 1, cin, cout))
+        p[f"pw{i}_norm"] = norm(cout)
+        cin = cout
+    p["fc"] = jax.random.normal(next(keys), (cin, n_classes)) * (
+        1.0 / cin) ** 0.5
+    p["fc_bias"] = jnp.zeros((n_classes,))
+    return p
+
+
+def mobilenet_apply(p: Dict, x: Array, width: int = 16) -> Array:
+    x = jax.nn.relu(group_norm(conv2d(x, p["conv1"], stride=1),
+                               **p["norm1"]))
+    cin = width
+    for i, (mult, stride) in enumerate(MOBILENET_SPEC):
+        cout = width * mult
+        x = conv2d(x, p[f"dw{i}"], stride=stride, groups=cin)
+        x = jax.nn.relu(group_norm(x, **p[f"dw{i}_norm"]))
+        x = conv2d(x, p[f"pw{i}"])
+        x = jax.nn.relu(group_norm(x, **p[f"pw{i}_norm"]))
+        cin = cout
+    x = jnp.mean(x, axis=(1, 2))
+    return jnp.dot(x, p["fc"]) + p["fc_bias"]
+
+
+def layer_names(p: Dict) -> List[str]:
+    """Weight-bearing layer paths, front-to-back (for gradual blocks)."""
+    return [k for k in p
+            if not k.endswith(("_norm", "_bias")) and "norm" not in k]
+
+
+def cnn_quant_filter(path: str, leaf) -> bool:
+    """UNIQ filter for the CNN trees: convs + fc, not norms/biases.
+
+    The paper quantizes first and last layers too (conv1 and fc included).
+    """
+    if leaf.ndim < 2:
+        return False
+    return "norm" not in path

@@ -1,0 +1,171 @@
+"""UNIQ QAT training loop for the CNN repro (paper Tables 2, 3, A.1, B.1).
+
+``run_experiment`` trains a narrow ResNet-18 / small MobileNet on the
+synthetic 10-class image stream with the chosen quantizer under the
+noise-injection scheme, then evaluates with *deterministically quantized*
+weights (the inference-time model) — the paper's protocol end to end:
+
+  * gradual stages (blocks of layers; FROZEN are hard-quantized +
+    optimizer-masked, the active block gets uniform noise in u-space),
+  * first and last layers quantized (unlike most competing methods),
+  * activations fake-quantized to a_bits,
+  * from-scratch or fine-tune regimes (App. A).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.cnn import cnn
+from repro.core.activations import fake_quant_act
+from repro.core.uniq import (CLEAN, FROZEN, NOISE, GradualSchedule,
+                             UniqConfig, transform_tree)
+from repro.data.synthetic import ImageStreamConfig, image_batch
+from repro.optim import optim as optim_lib
+
+
+@dataclasses.dataclass
+class CNNExperiment:
+    model: str = "resnet18"        # resnet18 | mobilenet
+    width: int = 16
+    w_bits: int = 4
+    a_bits: int = 32
+    method: str = "kquantile"      # kquantile | uniform | kmeans
+    steps: int = 300
+    batch: int = 128
+    lr: float = 3e-3
+    noise: float = 1.2             # image noise (task difficulty)
+    n_stages: int = 0              # gradual blocks; 0 = one per layer
+    iterations: int = 2
+    finetune_from: Optional[Dict] = None   # pre-trained params
+    pretrain_steps: int = 0        # plain FP steps before QAT (fine-tune)
+    seed: int = 0
+
+
+def _apply_fn(exp: CNNExperiment) -> Callable:
+    if exp.model == "resnet18":
+        return lambda p, x: cnn.resnet18_apply(p, x, width=exp.width)
+    return lambda p, x: cnn.mobilenet_apply(p, x, width=exp.width)
+
+
+def _init_fn(exp: CNNExperiment, rng):
+    if exp.model == "resnet18":
+        return cnn.init_resnet18(rng, width=exp.width)
+    return cnn.init_mobilenet(rng, width=exp.width)
+
+
+def _mode_fn(layer_order, modes):
+    idx = {name: i for i, name in enumerate(layer_order)}
+
+    def mode_for(path):
+        return modes[idx.get(path.split("/")[0], len(layer_order) - 1)]
+    return mode_for
+
+
+def _loss(apply_fn, params, images, labels, a_bits):
+    logits = apply_fn(params, images)
+    if a_bits < 32:
+        logits = fake_quant_act(logits, a_bits)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def accuracy(apply_fn, params, dcfg, n_batches=8, start=10_000):
+    correct = total = 0
+    for i in range(n_batches):
+        images, labels = image_batch(dcfg, start + i)
+        pred = jnp.argmax(apply_fn(params, images), axis=-1)
+        correct += float(jnp.sum(pred == labels))
+        total += labels.shape[0]
+    return correct / total
+
+
+def run_experiment(exp: CNNExperiment) -> Dict:
+    rng = jax.random.PRNGKey(exp.seed)
+    apply_fn = _apply_fn(exp)
+    params = exp.finetune_from or _init_fn(exp, rng)
+    layer_order = cnn.layer_names(params)
+    n_layers = len(layer_order)
+    n_blocks = exp.n_stages or n_layers
+    ucfg = UniqConfig(w_bits=exp.w_bits, a_bits=exp.a_bits,
+                      method=exp.method)
+    schedule = GradualSchedule(n_layers=n_layers, n_blocks=n_blocks,
+                               total_steps=exp.steps,
+                               iterations=exp.iterations)
+    ocfg = optim_lib.OptimConfig(kind="adamw", lr=exp.lr, weight_decay=1e-4,
+                                 grad_clip=1.0)
+    opt_state = optim_lib.init_state(params, ocfg)
+    dcfg = ImageStreamConfig(batch=exp.batch, noise=exp.noise, seed=1)
+
+    quant_on = exp.w_bits < 32
+
+    @jax.jit
+    def fp_step(params, opt_state, images, labels, lr):
+        loss, grads = jax.value_and_grad(
+            lambda p: _loss(apply_fn, p, images, labels, 32))(params)
+        params, opt_state, _ = optim_lib.apply_updates(
+            params, grads, opt_state, ocfg, lr)
+        return params, opt_state, loss
+
+    @jax.jit
+    def qat_step(params, opt_state, images, labels, modes, rng, lr):
+        def loss_fn(p):
+            p_eff = transform_tree(p, rng, _mode_fn(layer_order, modes),
+                                   ucfg, quant_filter=cnn.cnn_quant_filter,
+                                   stacked_prefixes=())
+            return _loss(apply_fn, p_eff, images, labels, exp.a_bits)
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        mask = jax.tree_util.tree_unflatten(
+            jax.tree_util.tree_structure(params),
+            [None] * len(jax.tree_util.tree_leaves(params)))
+        # freeze-mask: frozen layers' weights stop updating
+        from repro.core.uniq import path_str
+        flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+        mf = _mode_fn(layer_order, modes)
+        masks = []
+        for kp, leaf in flat:
+            pth = path_str(kp)
+            if cnn.cnn_quant_filter(pth, leaf):
+                masks.append((mf(pth) != FROZEN).astype(jnp.float32))
+            else:
+                masks.append(jnp.ones((), jnp.float32))
+        mask = jax.tree_util.tree_unflatten(treedef, masks)
+        params, opt_state, _ = optim_lib.apply_updates(
+            params, grads, opt_state, ocfg, lr, freeze_mask=mask)
+        return params, opt_state, loss
+
+    t0 = time.time()
+    loss = jnp.float32(0)
+    for step in range(exp.pretrain_steps):
+        images, labels = image_batch(dcfg, step)
+        params, opt_state, loss = fp_step(params, opt_state, images, labels,
+                                          jnp.float32(exp.lr))
+    for step in range(exp.steps):
+        images, labels = image_batch(dcfg, exp.pretrain_steps + step)
+        lr = jnp.float32(exp.lr * (0.5 ** (step / max(exp.steps, 1) * 3)))
+        if quant_on:
+            rng, k = jax.random.split(rng)
+            modes = schedule.modes_at(step)
+            params, opt_state, loss = qat_step(params, opt_state, images,
+                                               labels, modes, k, lr)
+        else:
+            params, opt_state, loss = fp_step(params, opt_state, images,
+                                              labels, lr)
+    train_time = time.time() - t0
+
+    # inference-time model: deterministic k-quantile (or ablation) quantizer
+    if quant_on:
+        params_q = transform_tree(
+            params, jax.random.PRNGKey(0), jnp.int32(FROZEN), ucfg,
+            quant_filter=cnn.cnn_quant_filter, stacked_prefixes=())
+    else:
+        params_q = params
+    acc = accuracy(apply_fn, params_q, dcfg)
+    return {"accuracy": acc, "train_time_s": train_time,
+            "final_loss": float(loss), "params": params,
+            "params_quantized": params_q}

@@ -1,0 +1,6 @@
+"""Architecture configs (one module per assigned arch + paper CNNs)."""
+from repro.configs import base
+from repro.configs.base import (ARCH_IDS, SHAPES, ArchConfig, ShapeConfig,
+                                cell_applicable, entries, get, get_smoke,
+                                input_specs)
+

@@ -1,0 +1,192 @@
+"""Architecture configuration schema + registry + input specs.
+
+Every assigned architecture is a module in this package registering an
+``ArchConfig`` (exact public-literature dims) and a ``smoke()`` reduced
+variant (same family, tiny dims) used by CPU tests.  The four benchmark
+shapes are global (see SHAPES); ``input_specs`` builds the
+ShapeDtypeStruct stand-ins the dry-run lowers against.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                    # dense | moe | hybrid | ssm | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0              # 0 -> d_model // n_heads
+    # MoE
+    n_experts: int = 1
+    top_k: int = 1
+    capacity_factor: float = 1.25
+    # gemma-2 style options
+    sliding_window: Optional[int] = None   # width of local attention
+    local_global_alternate: bool = False   # odd layers local, even global
+    attn_logit_cap: Optional[float] = None
+    final_logit_cap: Optional[float] = None
+    mlp_act: str = "silu"
+    post_norms: bool = False               # gemma-2 post-attn/post-mlp norms
+    qkv_bias: bool = False
+    embed_scale: bool = False              # multiply embeddings by sqrt(d)
+    tie_embeddings: bool = False
+    # SSM / hybrid
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_headdim: int = 64
+    ssm_dconv: int = 4
+    attn_every: int = 0                    # hybrid: shared attn block period
+    # enc-dec (audio)
+    enc_layers: int = 0
+    dec_layers: int = 0
+    # vlm stub frontend
+    n_patches: int = 0
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-6
+    norm_kind: str = "rms"                 # rms | layer
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim",
+                               self.d_model // max(self.n_heads, 1))
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 1
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Eligible for long_500k (SSM / hybrid families per assignment)."""
+        return self.family in ("ssm", "hybrid")
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                     # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+ARCH_IDS = [
+    "pixtral_12b", "granite_3_8b", "stablelm_12b", "gemma2_9b", "yi_6b",
+    "kimi_k2_1t_a32b", "llama4_maverick_400b_a17b", "zamba2_2_7b",
+    "mamba2_1_3b", "whisper_base",
+]
+
+_REGISTRY: Dict[str, "ArchEntry"] = {}
+
+
+@dataclasses.dataclass
+class ArchEntry:
+    config: ArchConfig
+    smoke: ArchConfig
+    source: str                   # provenance note
+
+
+def register(config: ArchConfig, smoke: ArchConfig, source: str):
+    _REGISTRY[config.name] = ArchEntry(config, smoke, source)
+    return config
+
+
+def get(name: str) -> ArchConfig:
+    _ensure_loaded()
+    return _REGISTRY[name].config
+
+
+def get_smoke(name: str) -> ArchConfig:
+    _ensure_loaded()
+    return _REGISTRY[name].smoke
+
+
+def entries() -> Dict[str, ArchEntry]:
+    _ensure_loaded()
+    return dict(_REGISTRY)
+
+
+def _ensure_loaded():
+    for arch in ARCH_IDS:
+        if arch not in _REGISTRY:
+            importlib.import_module(f"repro.configs.{arch}")
+
+
+def cell_applicable(cfg: ArchConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """Whether (arch x shape) runs, and the reason if skipped (DESIGN Sec. 4)."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, "full-attention family: long_500k skipped per spec"
+    return True, ""
+
+
+# --------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins; no allocation)
+# --------------------------------------------------------------------------
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Model inputs for a benchmark cell.
+
+    train  : tokens + targets (teacher forcing)
+    prefill: tokens (+ frontend embeddings)
+    decode : one new token + positions (the KV/SSM cache is built
+             separately by the serving layer — see repro.serve).
+
+    [vlm]/[audio]: the modality frontend is a stub — ``patch_embeds`` /
+    ``frames`` are precomputed embeddings per the assignment.
+    """
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    tok = lambda *s: jax.ShapeDtypeStruct(s, i32)
+    emb = lambda *s: jax.ShapeDtypeStruct(s, jnp.bfloat16)
+
+    if cfg.family == "audio":
+        # enc-dec: encoder frames (stub embeddings) + decoder tokens.
+        enc_len = S // 2
+        dec_len = S // 2
+        if shape.kind == "train":
+            return {"frames": emb(B, enc_len, cfg.d_model),
+                    "tokens": tok(B, dec_len), "targets": tok(B, dec_len)}
+        if shape.kind == "prefill":
+            return {"frames": emb(B, enc_len, cfg.d_model),
+                    "tokens": tok(B, dec_len)}
+        return {"tokens": tok(B, 1),
+                "positions": jax.ShapeDtypeStruct((B,), i32)}
+
+    if cfg.family == "vlm":
+        P = cfg.n_patches
+        if shape.kind == "train":
+            return {"patch_embeds": emb(B, P, cfg.d_model),
+                    "tokens": tok(B, S - P), "targets": tok(B, S - P)}
+        if shape.kind == "prefill":
+            return {"patch_embeds": emb(B, P, cfg.d_model),
+                    "tokens": tok(B, S - P)}
+        return {"tokens": tok(B, 1),
+                "positions": jax.ShapeDtypeStruct((B,), i32)}
+
+    if shape.kind == "train":
+        return {"tokens": tok(B, S), "targets": tok(B, S)}
+    if shape.kind == "prefill":
+        return {"tokens": tok(B, S)}
+    return {"tokens": tok(B, 1),
+            "positions": jax.ShapeDtypeStruct((B,), i32)}

@@ -1,0 +1,35 @@
+"""UNIQ core: the paper's contribution as a composable JAX library."""
+
+from repro.core.distributions import (EmpiricalModel, GaussianModel,
+                                      fit_model)
+from repro.core.quantizers import (fakequant, kmeans_fakequant,
+                                   kquantile_dequantize, kquantile_fakequant,
+                                   kquantile_quantize, levels_dequantize,
+                                   levels_quantize, lloyd_max,
+                                   uniform_dequantize, uniform_fakequant,
+                                   uniform_quantize)
+from repro.core.noise import (inject, inject_kmeans_quantizer,
+                              inject_kquantile, inject_levels,
+                              inject_uniform_quantizer, uniform_noise)
+from repro.core.uniq import (CLEAN, FROZEN, NOISE, GradualSchedule,
+                             QuantizedTensor, UniqConfig,
+                             default_quant_filter, quantize_tensor,
+                             quantize_tree, transform_param, transform_tree)
+from repro.core.activations import (act_scale, dequant_act, fake_quant_act,
+                                    quant_act)
+from repro.core import bops, packing
+
+__all__ = [
+    "EmpiricalModel", "GaussianModel", "fit_model",
+    "fakequant", "kmeans_fakequant", "kquantile_dequantize",
+    "kquantile_fakequant", "kquantile_quantize", "levels_dequantize",
+    "levels_quantize", "lloyd_max", "uniform_dequantize", "uniform_fakequant",
+    "uniform_quantize",
+    "inject", "inject_kmeans_quantizer", "inject_kquantile", "inject_levels",
+    "inject_uniform_quantizer", "uniform_noise",
+    "CLEAN", "FROZEN", "NOISE", "GradualSchedule", "QuantizedTensor",
+    "UniqConfig", "default_quant_filter", "quantize_tensor", "quantize_tree",
+    "transform_param", "transform_tree",
+    "act_scale", "dequant_act", "fake_quant_act", "quant_act",
+    "bops", "packing",
+]

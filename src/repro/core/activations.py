@@ -1,0 +1,55 @@
+"""Activation quantization (paper Sec. 3.4).
+
+Activations of already-quantized (frozen) blocks are quantized during
+training exactly as they would be at inference; at inference all activations
+are quantized.  We use symmetric per-tensor affine int-b quantization with an
+absmax scale (activations after norm layers are roughly symmetric; post-GLU
+activations too).  A straight-through estimator keeps training differentiable.
+
+``fake_quant_act`` is the training/serving emulation; ``quant_act`` /
+``dequant_act`` are the real integer codecs used by the serving path.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def act_scale(x: Array, bits: int, axis=None) -> Array:
+    """absmax scale s.t. codes span [-(2^{b-1}-1), +(2^{b-1}-1)]."""
+    qmax = 2.0 ** (bits - 1) - 1.0
+    amax = jnp.max(jnp.abs(x), axis=axis, keepdims=axis is not None)
+    amax = jnp.maximum(amax.astype(jnp.float32), 1e-8)
+    return jax.lax.stop_gradient(amax / qmax)
+
+
+def fake_quant_act(x: Array, bits: int, scale: Optional[Array] = None) -> Array:
+    """Round-trip int-b emulation with straight-through gradient."""
+    if bits >= 32:
+        return x
+    if scale is None:
+        scale = act_scale(x, bits)
+    qmax = 2.0 ** (bits - 1) - 1.0
+    xf = x.astype(jnp.float32)
+    q = jnp.clip(jnp.round(xf / scale), -qmax, qmax) * scale
+    # straight-through: forward quantized, backward identity
+    return (x + jax.lax.stop_gradient(q.astype(x.dtype) - x))
+
+
+def quant_act(x: Array, bits: int, scale: Optional[Array] = None):
+    """Real int8 codes + scale (serving path).  bits must be <= 8."""
+    assert bits <= 8
+    if scale is None:
+        scale = act_scale(x, bits)
+    qmax = 2.0 ** (bits - 1) - 1.0
+    codes = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -qmax, qmax)
+    return codes.astype(jnp.int8), scale
+
+
+def dequant_act(codes: Array, scale: Array, dtype=jnp.bfloat16) -> Array:
+    return (codes.astype(jnp.float32) * scale).astype(dtype)

@@ -1,0 +1,154 @@
+"""Distribution models used by the UNIQ uniformization trick.
+
+The paper (App. C) observes that per-layer weights are approximately Gaussian
+(Shapiro-Wilk W >= 0.82 for all ResNet-18 layers), and builds the k-quantile
+quantizer on the Gaussian CDF/quantile pair.  We implement:
+
+  * ``GaussianModel``  — closed-form CDF ``Phi`` / quantile ``Phi^{-1}`` with
+    per-tensor or per-channel (mu, sigma).  This is the paper's choice.
+  * ``EmpiricalModel`` — sorted-sample empirical CDF / quantile (beyond-paper
+    option, exact for any distribution; O(n log n) per refresh).
+
+Both expose ``cdf`` (uniformize) and ``quantile`` (deuniformize), the two maps
+of the uniformization trick:  U = F(W),   W = F^{-1}(U).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.special import ndtri as _ndtri
+from jax.scipy.stats import norm as _norm
+
+# Clip probabilities away from {0, 1} so that quantile() stays finite.  The
+# noise injection adds at most 1/(2k) >= 1/512 for k <= 256, so 1e-6 headroom
+# never clips a legal value of U + e after its own clamp.
+_EPS = 1e-6
+
+
+def _axes_excluding(ndim: int, channel_axis: Optional[int]) -> Tuple[int, ...]:
+    if channel_axis is None:
+        return tuple(range(ndim))
+    channel_axis = channel_axis % ndim
+    return tuple(a for a in range(ndim) if a != channel_axis)
+
+
+@dataclasses.dataclass(frozen=True)
+class GaussianModel:
+    """Gaussian weight model  W ~ N(mu, sigma^2)  (paper Sec. 3.1, App. C).
+
+    ``mu``/``sigma`` broadcast against the weight tensor; for per-tensor
+    statistics they are scalars, for per-channel they keep the channel axis.
+    """
+
+    mu: jax.Array
+    sigma: jax.Array
+
+    @staticmethod
+    def fit(w: jax.Array, channel_axis: Optional[int] = None,
+            stop_grad: bool = True) -> "GaussianModel":
+        """Estimate (mu, sigma) from ``w``.
+
+        channel_axis=None  -> per-tensor scalars (paper-faithful).
+        channel_axis=i     -> statistics per slice of axis i (beyond-paper).
+
+        Statistics are treated as constants of the current step
+        (``stop_gradient``) so that autodiff differentiates the transform
+        w -> F^{-1}(F(w)+e) at fixed thresholds, as in the paper.
+        """
+        axes = _axes_excluding(w.ndim, channel_axis)
+        mu = jnp.mean(w, axis=axes, keepdims=True)
+        sigma = jnp.std(w, axis=axes, keepdims=True)
+        sigma = jnp.maximum(sigma, 1e-8)
+        if stop_grad:
+            mu = jax.lax.stop_gradient(mu)
+            sigma = jax.lax.stop_gradient(sigma)
+        return GaussianModel(mu=mu, sigma=sigma)
+
+    def cdf(self, w: jax.Array) -> jax.Array:
+        """Uniformize:  u = Phi((w - mu)/sigma) in (0, 1).  f32 internally
+        (ndtr has no bf16 rule; bf16 master weights upcast here)."""
+        z = ((w.astype(jnp.float32) - self.mu) / self.sigma)
+        u = _norm.cdf(z.astype(jnp.float32))
+        return jnp.clip(u, _EPS, 1.0 - _EPS)
+
+    def quantile(self, u: jax.Array) -> jax.Array:
+        """Deuniformize:  w = mu + sigma * Phi^{-1}(u)."""
+        u = jnp.clip(u, _EPS, 1.0 - _EPS)
+        return self.mu + self.sigma * _ndtri(u)
+
+    def level_values(self, k: int) -> jax.Array:
+        """The k-quantile representation levels  q_i = F^{-1}((i+1/2)/k).
+
+        Under the Gaussian model the bin median is exactly the mid-probability
+        quantile, so dequantization is *analytic* — no codebook needed.
+        Returns shape ``(k,) + broadcast(mu, sigma).shape``.
+        """
+        centers = (jnp.arange(k, dtype=jnp.float32) + 0.5) / k
+        base = _ndtri(centers)  # (k,) standard-normal levels
+        # broadcast against mu/sigma (which may be per-channel)
+        shape = (k,) + (1,) * jnp.broadcast_shapes(
+            jnp.shape(self.mu), jnp.shape(self.sigma)).__len__()
+        return self.mu + self.sigma * base.reshape(shape)
+
+
+@dataclasses.dataclass(frozen=True)
+class EmpiricalModel:
+    """Empirical CDF/quantile from a sorted reference sample (beyond-paper).
+
+    ``sorted_ref`` is a 1-D sorted sample of the weight population.  ``cdf``
+    is the (interpolated) empirical CDF; ``quantile`` its inverse.  Exact for
+    arbitrary (non-Gaussian) weight distributions at O(log n) per lookup via
+    ``searchsorted``.
+    """
+
+    sorted_ref: jax.Array  # (n,) sorted ascending
+
+    @staticmethod
+    def fit(w: jax.Array, max_samples: int = 65536,
+            stop_grad: bool = True) -> "EmpiricalModel":
+        flat = w.reshape(-1)
+        n = flat.shape[0]
+        if n > max_samples:
+            # Deterministic strided subsample keeps quantiles stable.
+            stride = n // max_samples
+            flat = flat[: stride * max_samples : stride]
+        ref = jnp.sort(flat.astype(jnp.float32))
+        if stop_grad:
+            ref = jax.lax.stop_gradient(ref)
+        return EmpiricalModel(sorted_ref=ref)
+
+    def cdf(self, w: jax.Array) -> jax.Array:
+        n = self.sorted_ref.shape[0]
+        idx = jnp.searchsorted(self.sorted_ref, w.astype(jnp.float32),
+                               side="right")
+        # mid-rank convention keeps u in (0,1) and makes cdf(quantile(u)) ~ u
+        u = (idx.astype(jnp.float32) - 0.5) / n
+        return jnp.clip(u, _EPS, 1.0 - _EPS)
+
+    def quantile(self, u: jax.Array) -> jax.Array:
+        n = self.sorted_ref.shape[0]
+        u = jnp.clip(u, _EPS, 1.0 - _EPS)
+        # Linear interpolation between order statistics.
+        pos = u * n - 0.5
+        lo = jnp.clip(jnp.floor(pos).astype(jnp.int32), 0, n - 1)
+        hi = jnp.clip(lo + 1, 0, n - 1)
+        frac = jnp.clip(pos - lo.astype(jnp.float32), 0.0, 1.0)
+        return (1.0 - frac) * self.sorted_ref[lo] + frac * self.sorted_ref[hi]
+
+    def level_values(self, k: int) -> jax.Array:
+        centers = (jnp.arange(k, dtype=jnp.float32) + 0.5) / k
+        return self.quantile(centers)
+
+
+def fit_model(w: jax.Array, kind: str = "gaussian",
+              channel_axis: Optional[int] = None):
+    """Factory: ``kind`` in {"gaussian", "empirical"}."""
+    if kind == "gaussian":
+        return GaussianModel.fit(w, channel_axis=channel_axis)
+    if kind == "empirical":
+        return EmpiricalModel.fit(w)
+    raise ValueError(f"unknown distribution model: {kind!r}")

@@ -1,0 +1,162 @@
+"""Public wrappers around the Pallas kernels with backend dispatch.
+
+On TPU the compiled Mosaic kernels run; elsewhere (this CPU container, and
+inside the dry-run lowering) the mathematically identical pure-jnp reference
+from ``ref.py`` is used — Mosaic only lowers for real TPU targets.  Tests
+exercise the kernels explicitly with ``use_pallas=True`` (TPU interpret
+mode) and assert allclose against the reference.
+
+``uniq_transform`` carries a custom VJP so the fused kernel is usable in the
+training step: the forward emulated quantizer  w_hat = F^{-1}(F(w) + e)  has
+
+    d w_hat / d w = pdf(z) / pdf(z_hat) = exp((z_hat^2 - z^2)/2)
+
+(for NOISE mode; 1 for CLEAN, 0 for FROZEN), computable from (w, w_hat)
+alone — no need to persist the on-chip noise draw.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing
+from repro.core.uniq import CLEAN, FROZEN, NOISE
+from repro.kernels import kquantile as _kq
+from repro.kernels import qmatmul as _qmm
+from repro.kernels import ref as _ref
+from repro.kernels import uniq_noise as _un
+
+
+def _use_pallas(flag: Optional[bool]) -> bool:
+    if flag is None:
+        return jax.default_backend() == "tpu"
+    return flag
+
+
+def _grouped(w: jax.Array):
+    """Normalize an arbitrary weight tensor to the (G, R, C) kernel layout."""
+    if w.ndim == 2:
+        return w[None], (lambda x: x[0])
+    if w.ndim == 3:
+        return w, (lambda x: x)
+    lead = int(w.shape[0])
+    flat = w.reshape(lead, -1, w.shape[-1])
+    return flat, (lambda x: x.reshape(w.shape))
+
+
+# --------------------------------------------------------------------------
+# uniq_transform: fused 3-way UNIQ transform with custom VJP
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7))
+def _uniq_transform(w, mu, sigma, mode, e01, k, use_pallas, interpret):
+    return _uniq_fwd_impl(w, mu, sigma, mode, e01, k, use_pallas, interpret)
+
+
+def _uniq_fwd_impl(w, mu, sigma, mode, e01, k, use_pallas, interpret):
+    if use_pallas:
+        return _un.uniq_noise_fwd(w, mu, sigma, mode, e01, k=k,
+                                  interpret=interpret)
+    return _ref.uniq_transform_ref(w, mu, sigma, e01, mode, k)
+
+
+def _uniq_fwd(w, mu, sigma, mode, e01, k, use_pallas, interpret):
+    w_hat = _uniq_fwd_impl(w, mu, sigma, mode, e01, k, use_pallas, interpret)
+    return w_hat, (w, w_hat, mu, sigma, mode)
+
+
+def _uniq_bwd(k, use_pallas, interpret, res, g):
+    w, w_hat, mu, sigma, mode = res
+    z = (w.astype(jnp.float32) - mu) / sigma
+    zh = (w_hat.astype(jnp.float32) - mu) / sigma
+    # pdf ratio, clipped for numerical safety deep in the tails
+    ratio = jnp.exp(jnp.clip(0.5 * (zh * zh - z * z), -30.0, 30.0))
+    # zero gradient where u + e hit the [eps, 1-eps] clamp (|z_hat| at the
+    # ndtri(eps) rails) — matches autodiff of the reference clip
+    ratio = jnp.where(jnp.abs(zh) >= 4.75, 0.0, ratio)
+    m = mode.reshape((-1,) + (1,) * (w.ndim - 1))
+    dw = jnp.where(m == NOISE, ratio, jnp.where(m == CLEAN, 1.0, 0.0))
+    return (g * dw.astype(g.dtype), None, None, None, None)
+
+
+_uniq_transform.defvjp(_uniq_fwd, _uniq_bwd)
+
+
+def uniq_transform(w: jax.Array, mu: jax.Array, sigma: jax.Array,
+                   mode: jax.Array, rng: jax.Array, *, k: int,
+                   use_pallas: Optional[bool] = None,
+                   interpret: bool = False) -> jax.Array:
+    """Fused UNIQ transform on (G, R, C) grouped weights (see uniq_noise.py).
+
+    ``rng`` is a JAX PRNG key; the uniform draw happens on the host path so
+    the Pallas kernel and the reference see identical noise (on real TPU,
+    flip to ``uniq_noise_fwd_onchip`` to keep the draw on-chip).
+    """
+    mode = jnp.asarray(mode, jnp.int32).reshape((w.shape[0],))
+    e01 = jax.random.uniform(rng, w.shape, dtype=jnp.float32)
+    return _uniq_transform(w, mu, sigma, mode, e01, k, _use_pallas(use_pallas),
+                           interpret)
+
+
+# --------------------------------------------------------------------------
+# Deterministic quantize / dequantize (serving codecs)
+# --------------------------------------------------------------------------
+
+def quantize_weights(w: jax.Array, mu: jax.Array, sigma: jax.Array, *,
+                     bits: int, use_pallas: Optional[bool] = None,
+                     interpret: bool = False) -> jax.Array:
+    """weights -> packed codes ((..., C//2) uint8 for int4, int8 for int8)."""
+    k = 2 ** bits
+    if _use_pallas(use_pallas):
+        codes = _kq.kquantile_quantize(w, mu, sigma, k=k, interpret=interpret)
+    else:
+        codes = _ref.kquantile_codes_ref(w, mu, sigma, k)
+    return packing.pack_int4(codes) if bits == 4 else codes
+
+
+def dequantize_weights(codes: jax.Array, mu: jax.Array, sigma: jax.Array, *,
+                       bits: int, out_dtype=jnp.bfloat16,
+                       use_pallas: Optional[bool] = None,
+                       interpret: bool = False) -> jax.Array:
+    """packed codes -> weights via analytic k-quantile levels."""
+    k = 2 ** bits
+    if bits == 4:
+        codes = packing.unpack_int4(codes)
+    if _use_pallas(use_pallas):
+        return _kq.kquantile_dequantize(codes, mu, sigma, k=k,
+                                        out_dtype=out_dtype,
+                                        interpret=interpret)
+    return _ref.kquantile_dequant_ref(codes, mu, sigma, k, dtype=out_dtype)
+
+
+# --------------------------------------------------------------------------
+# Dequant-fused matmul (serving)
+# --------------------------------------------------------------------------
+
+def qmatmul(a: jax.Array, w_packed: jax.Array, mu: jax.Array,
+            sigma: jax.Array, *, bits: int, out_dtype=jnp.float32,
+            use_pallas: Optional[bool] = None,
+            interpret: bool = False, **block_kw) -> jax.Array:
+    """a (M, K) @ dequant(w) (K, N), dequant fused into the matmul tiles."""
+    if _use_pallas(use_pallas):
+        return _qmm.qmatmul(a, w_packed, mu, sigma, bits=bits,
+                            out_dtype=out_dtype, interpret=interpret,
+                            **block_kw)
+    return _ref.qmatmul_ref(a, w_packed, mu, sigma, bits, out_dtype)
+
+
+def qmatmul_a8(a_codes: jax.Array, a_scale: jax.Array, w_packed: jax.Array,
+               mu: jax.Array, sigma: jax.Array, *, bits: int,
+               out_dtype=jnp.float32, use_pallas: Optional[bool] = None,
+               interpret: bool = False, **block_kw) -> jax.Array:
+    """int8-activation variant (W4A8 / W8A8)."""
+    if _use_pallas(use_pallas):
+        return _qmm.qmatmul_a8(a_codes, a_scale, w_packed, mu, sigma,
+                               bits=bits, out_dtype=out_dtype,
+                               interpret=interpret, **block_kw)
+    return _ref.qmatmul_a8_ref(a_codes, a_scale, w_packed, mu, sigma, bits,
+                               out_dtype)

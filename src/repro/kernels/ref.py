@@ -1,0 +1,107 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Shapes follow the kernels' grouped convention: weights are 3-D
+``(G, R, C)`` where G is a group axis (scan-stacked layers; G=1 for plain
+tensors), statistics are ``(G, 1, C)`` (per-channel) or ``(G, 1, 1)``
+(per-tensor).  All oracles are differentiable jnp code — they are *also* the
+implementations used on non-TPU backends and inside the dry-run lowering
+(Mosaic kernels only lower for real TPU targets).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing
+from repro.core.uniq import CLEAN, FROZEN, NOISE
+
+Array = jax.Array
+
+_SQRT2 = 1.4142135623730951
+_EPS = 1e-6
+
+
+def phi(z: Array) -> Array:
+    """Standard normal CDF via erf (matches the in-kernel formulation)."""
+    return 0.5 * (1.0 + jax.lax.erf(z / _SQRT2))
+
+
+def phi_inv(u: Array) -> Array:
+    """Standard normal quantile via erf_inv (matches the kernel)."""
+    return _SQRT2 * jax.lax.erf_inv(2.0 * u - 1.0)
+
+
+def uniform_from_bits(bits: Array) -> Array:
+    """uint32 random bits -> U[0,1) float32, 24-bit mantissa convention."""
+    return (bits >> 8).astype(jnp.float32) * (2.0 ** -24)
+
+
+def uniq_transform_ref(w: Array, mu: Array, sigma: Array, e01: Array,
+                       mode: Array, k: int) -> Array:
+    """Fused UNIQ 3-way transform (oracle for the uniq_noise kernel).
+
+    w     : (G, R, C) weights
+    mu    : (G, 1, C) or (G, 1, 1)
+    sigma : same shape as mu
+    e01   : (G, R, C) U[0,1) noise (the kernel draws these on-chip)
+    mode  : (G,) int32 in {CLEAN, NOISE, FROZEN}
+    """
+    z = (w.astype(jnp.float32) - mu) / sigma
+    u = jnp.clip(phi(z), _EPS, 1.0 - _EPS)
+    e = (e01 - 0.5) / k
+    u_noise = jnp.clip(u + e, _EPS, 1.0 - _EPS)
+    codes = jnp.clip(jnp.floor(u * k), 0, k - 1)
+    u_frozen = (jax.lax.stop_gradient(codes) + 0.5) / k
+    m = mode.reshape(-1, 1, 1)
+    u_sel = jnp.where(m == NOISE, u_noise, u_frozen)
+    w_hat = (mu + sigma * phi_inv(u_sel)).astype(w.dtype)
+    w_hat = jnp.where(m == FROZEN, jax.lax.stop_gradient(w_hat), w_hat)
+    return jnp.where(m == CLEAN, w, w_hat)
+
+
+def code_offset(k: int) -> int:
+    """int8-stored codes are offset by -128 iff k == 256 (range fit)."""
+    return 128 if k == 256 else 0
+
+
+def kquantile_codes_ref(w: Array, mu: Array, sigma: Array, k: int) -> Array:
+    """(G, R, C) weights -> int8 codes in [0, k) - code_offset(k)."""
+    z = (w.astype(jnp.float32) - mu) / sigma
+    u = jnp.clip(phi(z), _EPS, 1.0 - _EPS)
+    c = jnp.clip(jnp.floor(u * k), 0, k - 1) - code_offset(k)
+    return c.astype(jnp.int8)
+
+
+def kquantile_dequant_ref(codes: Array, mu: Array, sigma: Array, k: int,
+                          dtype=jnp.bfloat16) -> Array:
+    """int codes -> analytic k-quantile levels  mu + sigma * Phi^{-1}((c+.5)/k).
+
+    Applies the int8 storage offset for k == 256 (see code_offset)."""
+    c = codes.astype(jnp.float32) + code_offset(k)
+    centers = jnp.clip((c + 0.5) / k, _EPS, 1 - _EPS)
+    return (mu + sigma * phi_inv(centers)).astype(dtype)
+
+
+def qmatmul_ref(a: Array, w_packed: Array, mu: Array, sigma: Array,
+                bits: int, out_dtype=jnp.float32) -> Array:
+    """Oracle for the dequant-fused matmul.
+
+    a        : (M, K) bf16/f32 activations
+    w_packed : (K, N//2) uint8 (bits=4, two codes/byte) or (K, N) int8 (bits=8)
+    mu,sigma : (1, N) f32 per-out-channel statistics
+    returns  : (M, N) out_dtype
+    """
+    k = 2 ** bits
+    codes = packing.unpack_int4(w_packed) if bits == 4 else w_packed
+    w = kquantile_dequant_ref(codes, mu, sigma, k, dtype=jnp.float32)
+    return jnp.dot(a.astype(jnp.float32), w,
+                   preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+def qmatmul_a8_ref(a_codes: Array, a_scale: Array, w_packed: Array,
+                   mu: Array, sigma: Array, bits: int,
+                   out_dtype=jnp.float32) -> Array:
+    """W4/W8 x A8 variant: activations are int8 codes with a scalar scale."""
+    a = a_codes.astype(jnp.float32) * a_scale
+    return qmatmul_ref(a, w_packed, mu, sigma, bits, out_dtype)

@@ -1,0 +1,368 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST set the host-device override before any other import (jax locks the
+device count at first init):
+"""
+import os  # noqa: E402
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import argparse      # noqa: E402
+import dataclasses   # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np   # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import base as cb                      # noqa: E402
+from repro.core.uniq import UniqConfig                    # noqa: E402
+from repro.launch.hlo_analysis import module_stats        # noqa: E402
+from repro.launch.mesh import make_production_mesh        # noqa: E402
+from repro.models import model                            # noqa: E402
+from repro.models.lm import ModelOpts                     # noqa: E402
+from repro.optim.optim import OptimConfig                 # noqa: E402
+from repro.parallel import sharding as shd                # noqa: E402
+from repro.train import steps as train_steps              # noqa: E402
+
+# TPU v5e constants (per chip)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s/link (~ring bandwidth per device)
+DCN_BW = 25e9                # bytes/s/device across pods (assumption)
+HBM_BYTES = 16 * 1024 ** 3   # 16 GiB
+
+
+def _dtype_size(dt) -> int:
+    return jnp.dtype(dt).itemsize
+
+
+def param_count(cfg: cb.ArchConfig) -> float:
+    """Analytic parameter count (all weights incl. embeddings)."""
+    sds = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0), cfg))
+    return float(sum(np.prod(l.shape) for l in jax.tree.leaves(sds)))
+
+
+def active_param_count(cfg: cb.ArchConfig) -> float:
+    """Active-per-token params (MoE counts top_k of n_experts)."""
+    total = param_count(cfg)
+    if not cfg.is_moe:
+        return total
+    expert = 3 * cfg.d_model * cfg.d_ff * cfg.n_experts * cfg.n_layers
+    active = expert * cfg.top_k / cfg.n_experts
+    return total - expert + active
+
+
+def _cast_tree(sds_tree, float_dtype):
+    def one(l):
+        if jnp.issubdtype(l.dtype, jnp.floating):
+            return jax.ShapeDtypeStruct(l.shape, float_dtype)
+        return l
+    return jax.tree.map(one, sds_tree)
+
+
+def _with_shardings(sds_tree, shardings):
+    return jax.tree.map(
+        lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
+        sds_tree, shardings)
+
+
+def _replicated(mesh):
+    return NamedSharding(mesh, P())
+
+
+def state_shardings(state_sds, pshard, mesh):
+    """Shardings for a train state: momentum follows its parameter."""
+    repl = _replicated(mesh)
+    flat_p = jax.tree_util.tree_flatten(pshard)[0]
+
+    def mu_tree(mu):
+        leaves_mu, treedef = jax.tree_util.tree_flatten(
+            mu, is_leaf=lambda x: isinstance(x, dict) and "m" in x)
+        out = []
+        for i, d in enumerate(leaves_mu):
+            e = {"m": flat_p[i]}
+            if "ms" in d:
+                e["ms"] = repl
+            out.append(e)
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    sh = {"params": pshard,
+          "opt": {"mu": mu_tree(state_sds["opt"]["mu"]),
+                  "count": repl},
+          "step": repl}
+    if "nu" in state_sds["opt"]:
+        sh["opt"]["nu"] = pshard
+    return sh
+
+
+def build_train_cell(cfg, shape, mesh, args):
+    opts = ModelOpts(
+        compute_dtype=jnp.bfloat16,
+        a_bits=args.a_bits, remat=True,
+        moe_axis="model" if cfg.is_moe else None, mesh=mesh,
+        fsdp_axes=("data", "pod") if args.fsdp == "pod" else ("data",),
+        attn_chunked_min_len=args.attn_chunk_min, kv_chunk=1024,
+        ce_chunk=args.ce_chunk, moe_mode=args.moe_mode,
+        dp_includes_model=args.no_tp)
+    tc = train_steps.TrainConfig(
+        uniq=UniqConfig(w_bits=args.w_bits, a_bits=args.a_bits),
+        optim=OptimConfig(momentum_dtype=args.momentum_dtype),
+        total_steps=10000,
+        dp_compress_bits=args.dp_compress if mesh.shape.get("pod", 1) > 1
+        and not cfg.is_moe else 0,
+        uniq_in_scan=args.uniq_in_scan)
+    step_fn, _ = train_steps.make_train_step(cfg, opts, tc)
+
+    rng = jax.random.PRNGKey(0)
+    state_sds = jax.eval_shape(
+        lambda r: train_steps.init_state(r, cfg, tc), rng)
+    state_sds["params"] = _cast_tree(state_sds["params"],
+                                     jnp.dtype(args.param_dtype))
+    pshard = shd.param_shardings(state_sds["params"], cfg, mesh,
+                                 fsdp=args.fsdp if args.fsdp != "pod"
+                                 else "pod", expert_mode=args.moe_mode,
+                                 tp=not args.no_tp)
+    st_sh = state_shardings(state_sds, pshard, mesh)
+    state_in = _with_shardings(state_sds, st_sh)
+
+    batch_sds = cb.input_specs(cfg, shape)
+    batch_sh = shd.input_shardings(batch_sds, mesh,
+                                   include_model=args.no_tp)
+    batch_in = _with_shardings(batch_sds, batch_sh)
+    rng_sds = jax.eval_shape(lambda: jax.random.PRNGKey(0))
+    rng_in = jax.ShapeDtypeStruct(rng_sds.shape, rng_sds.dtype,
+                                  sharding=_replicated(mesh))
+
+    fn = jax.jit(step_fn, donate_argnums=(0,),
+                 out_shardings=(st_sh, None))
+    return fn, (state_in, batch_in, rng_in)
+
+
+def _serve_params_sds(cfg, bits):
+    rng = jax.random.PRNGKey(0)
+    if bits < 16:
+        f = lambda r: model.quantize_for_serving(model.init(r, cfg), bits)
+        return jax.eval_shape(f, rng)
+    return _cast_tree(jax.eval_shape(lambda r: model.init(r, cfg), rng),
+                      jnp.bfloat16)
+
+
+def build_prefill_cell(cfg, shape, mesh, args):
+    opts = ModelOpts(compute_dtype=jnp.bfloat16, a_bits=args.a_bits,
+                     remat=False,
+                     moe_axis="model" if cfg.is_moe else None, mesh=mesh,
+                     attn_chunked_min_len=args.attn_chunk_min, kv_chunk=1024,
+                     moe_mode=args.moe_mode)
+    params_sds = _serve_params_sds(cfg, args.serve_bits)
+    pshard = shd.param_shardings(params_sds, cfg, mesh, fsdp=args.fsdp
+                                 if args.fsdp != "pod" else "pod",
+                                 expert_mode=args.moe_mode)
+    params_in = _with_shardings(params_sds, pshard)
+    batch_sds = cb.input_specs(cfg, shape)
+    batch_in = _with_shardings(batch_sds,
+                               shd.input_shardings(batch_sds, mesh))
+
+    def prefill_step(params, batch):
+        return model.prefill(params, cfg, opts, batch)
+
+    return jax.jit(prefill_step), (params_in, batch_in)
+
+
+def build_decode_cell(cfg, shape, mesh, args):
+    opts = ModelOpts(compute_dtype=jnp.bfloat16, a_bits=args.a_bits,
+                     remat=False,
+                     moe_axis="model" if cfg.is_moe else None, mesh=mesh,
+                     moe_mode=args.moe_mode)
+    params_sds = _serve_params_sds(cfg, args.serve_bits)
+    pshard = shd.param_shardings(params_sds, cfg, mesh, fsdp=args.fsdp
+                                 if args.fsdp != "pod" else "pod",
+                                 expert_mode=args.moe_mode)
+    params_in = _with_shardings(params_sds, pshard)
+
+    cache_sds = model.cache_specs(cfg, shape)
+    cache_sh = shd.cache_shardings(cfg, cache_sds, mesh)
+    cache_in = _with_shardings(cache_sds, cache_sh)
+
+    B = shape.global_batch
+    bs = NamedSharding(mesh, P(shd._batch_axes(mesh, B), None))
+    ps = NamedSharding(mesh, P(shd._batch_axes(mesh, B)))
+    tok_in = jax.ShapeDtypeStruct((B, 1), jnp.int32, sharding=bs)
+    pos_in = jax.ShapeDtypeStruct((B,), jnp.int32, sharding=ps)
+
+    def serve_step(params, cache, tokens, positions):
+        return model.decode(params, cfg, opts, cache, tokens, positions)
+
+    fn = jax.jit(serve_step, donate_argnums=(1,),
+                 out_shardings=(None, cache_sh))
+    return fn, (params_in, cache_in, tok_in, pos_in)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, args) -> dict:
+    cfg = cb.get(arch) if not args.smoke else cb.get_smoke(arch)
+    shape = cb.SHAPES[shape_name]
+    ok, reason = cb.cell_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multi" if multi_pod else "single",
+                "status": "skipped", "reason": reason}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    t0 = time.time()
+    with mesh:
+        if shape.kind == "train":
+            fn, cell_args = build_train_cell(cfg, shape, mesh, args)
+        elif shape.kind == "prefill":
+            fn, cell_args = build_prefill_cell(cfg, shape, mesh, args)
+        else:
+            fn, cell_args = build_decode_cell(cfg, shape, mesh, args)
+        lowered = fn.lower(*cell_args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    txt = compiled.as_text()
+    stats = module_stats(txt, pod_size=256)
+    coll = stats["collectives"]
+
+    # loop-aware re-derivation (cost_analysis counts while bodies once)
+    flops_dev = float(stats["flops_per_device"])
+    bytes_dev = float(stats["hbm_bytes_per_device"])
+    compute_s = flops_dev / PEAK_FLOPS
+    memory_s = bytes_dev / HBM_BW
+    ici_s = coll["ici_bytes_per_device"] / ICI_BW
+    dcn_s = coll["dcn_bytes_per_device"] / DCN_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "ici_s": ici_s, "dcn_s": dcn_s}
+    dominant = max(terms, key=terms.get)
+
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    n_active = active_param_count(cfg)
+    mf = (6.0 if shape.kind == "train" else 2.0) * n_active * tokens
+    hlo_total = flops_dev * n_dev
+    arg_b = mem.argument_size_in_bytes if mem else 0
+    out_b = mem.output_size_in_bytes if mem else 0
+    tmp_b = mem.temp_size_in_bytes if mem else 0
+    alias_b = mem.alias_size_in_bytes if mem else 0
+    peak_dev = arg_b + out_b + tmp_b - alias_b
+
+    res = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "status": "ok", "n_devices": n_dev,
+        "kind": shape.kind,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "flops_per_device": flops_dev,
+        "bytes_per_device": bytes_dev,
+        "cost_analysis_raw": {
+            "flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0)),
+        },
+        "bytes_by_op": stats["bytes_by_op"],
+        "top_bytes": stats["top_bytes"],
+        "collectives": coll,
+        "memory": {
+            "argument_bytes": arg_b, "output_bytes": out_b,
+            "temp_bytes": tmp_b, "alias_bytes": alias_b,
+            "peak_per_device": peak_dev,
+            "fits_hbm": bool(peak_dev <= HBM_BYTES),
+        },
+        "roofline": {
+            **{k: float(v) for k, v in terms.items()},
+            "dominant": dominant,
+            "step_time_s": float(max(terms.values())),
+        },
+        "model_flops": {
+            "tokens": tokens,
+            "n_active_params": n_active,
+            "model_flops": mf,
+            "hlo_flops_total": hlo_total,
+            "useful_ratio": (mf / hlo_total) if hlo_total else 0.0,
+        },
+        "settings": {
+            "w_bits": args.w_bits, "a_bits": args.a_bits,
+            "serve_bits": args.serve_bits, "fsdp": args.fsdp,
+            "param_dtype": args.param_dtype,
+            "momentum_dtype": args.momentum_dtype,
+            "ce_chunk": args.ce_chunk,
+        },
+    }
+    return res
+
+
+def main():
+    p = argparse.ArgumentParser(description="multi-pod dry-run")
+    p.add_argument("--arch", default="all")
+    p.add_argument("--shape", default="all")
+    p.add_argument("--mesh", default="both",
+                   choices=["single", "multi", "both"])
+    p.add_argument("--out-dir", default="experiments/dryrun")
+    p.add_argument("--w-bits", type=int, default=4)
+    p.add_argument("--a-bits", type=int, default=8)
+    p.add_argument("--serve-bits", type=int, default=4)
+    p.add_argument("--fsdp", default="data", choices=["data", "pod", "off"])
+    p.add_argument("--param-dtype", default="float32")
+    p.add_argument("--momentum-dtype", default="float32")
+    p.add_argument("--ce-chunk", type=int, default=2048)
+    p.add_argument("--dp-compress", type=int, default=0,
+                   help="int8-compress cross-pod grad sync (multi-pod)")
+    p.add_argument("--no-tp", action="store_true",
+                   help="fsdp-only layout: ZeRO-3 over data x model, no TP")
+    p.add_argument("--uniq-in-scan", action="store_true",
+                   help="apply UNIQ transform inside the layer scan")
+    p.add_argument("--moe-mode", default="gather",
+                   choices=["gather", "reduce"],
+                   help="MoE FSDP layout: gather weights vs reduce outputs")
+    p.add_argument("--attn-chunk-min", type=int, default=8192,
+                   help="use chunked (flash-style) attention above this S")
+    p.add_argument("--smoke", action="store_true",
+                   help="use reduced configs (debugging the harness)")
+    p.add_argument("--tag", default="")
+    args = p.parse_args()
+    if args.fsdp == "off":
+        args.fsdp = False
+
+    archs = cb.ARCH_IDS if args.arch == "all" else args.arch.split(",")
+    shapes = list(cb.SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    for arch in archs:
+        for shape in shapes:
+            for multi in meshes:
+                tagged = f"{arch}__{shape}__{'multi' if multi else 'single'}"
+                if args.tag:
+                    tagged += f"__{args.tag}"
+                out_path = os.path.join(args.out_dir, tagged + ".json")
+                print(f"=== {tagged}", flush=True)
+                try:
+                    res = run_cell(arch, shape, multi, args)
+                except Exception as e:  # record failures as results
+                    res = {"arch": arch, "shape": shape,
+                           "mesh": "multi" if multi else "single",
+                           "status": "error", "error": repr(e),
+                           "trace": traceback.format_exc()[-4000:]}
+                with open(out_path, "w") as f:
+                    json.dump(res, f, indent=1)
+                status = res["status"]
+                extra = ""
+                if status == "ok":
+                    r = res["roofline"]
+                    extra = (f" dom={r['dominant']} step={r['step_time_s']:.4f}s"
+                             f" peak={res['memory']['peak_per_device']/2**30:.2f}GiB"
+                             f" compile={res['compile_s']:.0f}s")
+                elif status == "error":
+                    extra = " " + res["error"][:160]
+                print(f"    -> {status}{extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

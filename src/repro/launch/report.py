@@ -1,0 +1,94 @@
+"""Render the dry-run artifacts into the EXPERIMENTS.md roofline tables.
+
+    PYTHONPATH=src python -m repro.launch.report [--dir experiments/dryrun]
+
+Emits markdown: one row per (arch x shape x mesh) with the three roofline
+terms, dominant bottleneck, MODEL_FLOPS ratio, and memory fit.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def fmt_s(x):
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x * 1e6:.0f}us"
+    if x < 1:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x:.2f}s"
+
+
+def load(dirname):
+    rows = []
+    for p in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        with open(p) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def table(rows, mesh_filter=None):
+    out = ["| arch | shape | mesh | compute | memory | ICI | DCN | dominant"
+           " | step | useful | peak/dev | fits |",
+           "|---|---|---|---|---|---|---|---|---|---|---|---|"]
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2,
+             "long_500k": 3}
+    rows = sorted(rows, key=lambda r: (r["arch"], order.get(r["shape"], 9),
+                                       r["mesh"]))
+    for r in rows:
+        if mesh_filter and r["mesh"] != mesh_filter:
+            continue
+        if r["status"] == "skipped":
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — "
+                       f"| — | — | SKIP | — | — | — | — |")
+            continue
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | ERR "
+                       f"| {r.get('error', '')[:40]} | | | | | | | |")
+            continue
+        rf = r["roofline"]
+        mf = r["model_flops"]
+        mem = r["memory"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {fmt_s(rf['compute_s'])} | {fmt_s(rf['memory_s'])} "
+            f"| {fmt_s(rf['ici_s'])} | {fmt_s(rf['dcn_s'])} "
+            f"| **{rf['dominant'][:-2]}** | {fmt_s(rf['step_time_s'])} "
+            f"| {mf['useful_ratio']:.2f} "
+            f"| {mem['peak_per_device'] / 2 ** 30:.1f}GiB "
+            f"| {'Y' if mem['fits_hbm'] else 'N'} |")
+    return "\n".join(out)
+
+
+def summary(rows):
+    ok = [r for r in rows if r["status"] == "ok"]
+    skip = [r for r in rows if r["status"] == "skipped"]
+    err = [r for r in rows if r["status"] == "error"]
+    doms = {}
+    for r in ok:
+        doms[r["roofline"]["dominant"]] = doms.get(
+            r["roofline"]["dominant"], 0) + 1
+    fits = sum(1 for r in ok if r["memory"]["fits_hbm"])
+    return (f"{len(ok)} compiled, {len(skip)} skipped (long_500k "
+            f"full-attention rule), {len(err)} errors; dominant terms: "
+            f"{doms}; {fits}/{len(ok)} fit 16GiB HBM")
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--dir", default="experiments/dryrun")
+    p.add_argument("--mesh", default=None)
+    args = p.parse_args()
+    rows = load(args.dir)
+    print(summary(rows))
+    print()
+    print(table(rows, args.mesh))
+
+
+if __name__ == "__main__":
+    main()

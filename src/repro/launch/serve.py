@@ -1,0 +1,65 @@
+"""Serving driver: batched generation with UNIQ-quantized weights.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch granite_3_8b \
+        --smoke --w-bits 4 --batch 4 --prompt-len 16 --new-tokens 32
+
+Loads (or random-inits) weights, k-quantile-quantizes them to --w-bits,
+and decodes a batch of synthetic prompts, reporting tokens/s and agreement
+with the bf16 model (greedy-match rate).
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import base as cb
+from repro.models import model
+from repro.models.lm import ModelOpts
+from repro.serve import serve as serve_lib
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", required=True)
+    p.add_argument("--smoke", action="store_true")
+    p.add_argument("--w-bits", type=int, default=4)
+    p.add_argument("--a-bits", type=int, default=32)
+    p.add_argument("--batch", type=int, default=4)
+    p.add_argument("--prompt-len", type=int, default=16)
+    p.add_argument("--new-tokens", type=int, default=32)
+    p.add_argument("--seed", type=int, default=0)
+    args = p.parse_args(argv)
+
+    cfg = cb.get_smoke(args.arch) if args.smoke else cb.get(args.arch)
+    opts = ModelOpts(compute_dtype=jnp.float32, remat=False,
+                     attn_chunked_min_len=1 << 30, ssd_chunk=16)
+    rng = jax.random.PRNGKey(args.seed)
+    params = model.init(rng, cfg)
+    prompts = jax.random.randint(jax.random.PRNGKey(1),
+                                 (args.batch, args.prompt_len), 0, cfg.vocab)
+    sc = serve_lib.ServeConfig(w_bits=args.w_bits, a_bits=args.a_bits)
+
+    out_fp = serve_lib.generate(params, cfg, opts, sc, prompts,
+                                args.new_tokens)
+    t0 = time.time()
+    params_q = serve_lib.prepare_params(params, sc)
+    sopts = serve_lib.make_serve_opts(opts, sc)
+    out_q = serve_lib.generate(params_q, cfg, sopts, prompts,
+                               args.new_tokens) \
+        if args.w_bits < 16 else out_fp
+    dt = time.time() - t0
+    match = float(jnp.mean((out_fp == out_q).astype(jnp.float32)))
+    n_tok = args.batch * args.new_tokens
+    print(f"[serve] {n_tok} tokens in {dt:.2f}s "
+          f"({n_tok / max(dt, 1e-9):.1f} tok/s host-loop)")
+    print(f"[serve] W{args.w_bits} greedy agreement with bf16: "
+          f"{match * 100:.1f}%")
+    print("sample (quantized):", out_q[0][:16].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""Model zoo: attention / MoE / SSD primitives and per-family assemblies."""
+
+from repro.models.lm import ModelOpts
+from repro.models import model
+
+__all__ = ["ModelOpts", "model"]

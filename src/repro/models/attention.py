@@ -1,0 +1,151 @@
+"""Attention: GQA with RoPE, sliding window, logit soft-capping, KV cache.
+
+Three execution paths, one math:
+
+  * ``full_attention``    — materialized (B, H, Sq, Sk) scores; fine for
+    train_4k-sized tiles.
+  * ``chunked_attention`` — lax.scan over KV blocks with online softmax
+    (flash-style, O(Sq * block) live scores); used for long prefill.
+    This is the memory-hierarchy adaptation: on TPU the chunk loop becomes
+    a VMEM-resident pipeline under XLA; a hand-written Pallas flash kernel
+    is unnecessary for the dry-run (jnp lowers to the same fused HLO
+    structure) and the paper's contribution is elsewhere.
+  * ``decode_attention``  — one query position against a (possibly much
+    longer) cache; linear in S.
+
+Layout: q (B, Sq, H, D), k/v (B, Sk, KV, D); GQA groups G = H // KV.
+``window``: None for global attention, else causal sliding window width
+(gemma-2 local layers).  ``softcap``: attention-logit soft-capping.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import softcap as _softcap
+
+Array = jax.Array
+
+NEG_INF = -1e30
+
+
+class AttnParams(NamedTuple):
+    window: Optional[int] = None      # sliding-window width (local attention)
+    logit_cap: Optional[float] = None # gemma-2 soft-capping
+    causal: bool = True
+
+
+def _mask(q_pos: Array, k_pos: Array, p: AttnParams) -> Array:
+    """(..., Sq, Sk) boolean validity mask from position vectors."""
+    m = jnp.ones((q_pos.shape[-1], k_pos.shape[-1]), jnp.bool_)
+    if p.causal:
+        m &= q_pos[:, None] >= k_pos[None, :]
+    if p.window is not None:
+        m &= q_pos[:, None] - k_pos[None, :] < p.window
+    return m
+
+
+def _scores(q: Array, k: Array, p: AttnParams) -> Array:
+    """q (B, Sq, H, D) x k (B, Sk, KV, D) -> (B, H, Sq, Sk) f32 logits."""
+    B, Sq, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, D)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k,
+                   preferred_element_type=jnp.float32)
+    s = s * (D ** -0.5)
+    s = _softcap(s, p.logit_cap)
+    return s.reshape(B, H, Sq, k.shape[1])
+
+
+def full_attention(q: Array, k: Array, v: Array, q_pos: Array, k_pos: Array,
+                   p: AttnParams) -> Array:
+    """Materialized-scores attention.  positions: (Sq,), (Sk,) int32."""
+    B, Sq, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    s = _scores(q, k, p)                                  # (B,H,Sq,Sk) f32
+    mask = _mask(q_pos, k_pos, p)
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    a = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    a = a.reshape(B, KV, G, Sq, k.shape[1])
+    out = jnp.einsum("bkgqs,bskd->bqkgd", a, v)
+    return out.reshape(B, Sq, H, D)
+
+
+def chunked_attention(q: Array, k: Array, v: Array, q_pos: Array,
+                      k_pos: Array, p: AttnParams,
+                      kv_chunk: int = 1024) -> Array:
+    """Online-softmax attention, scanning KV in chunks (flash-style)."""
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    KV = k.shape[2]
+    G = H // KV
+    if Sk % kv_chunk:
+        kv_chunk = Sk  # fallback: single chunk
+    n_chunks = Sk // kv_chunk
+
+    qg = (q.astype(jnp.float32) * (D ** -0.5)).reshape(B, Sq, KV, G, D)
+    kc = k.reshape(B, n_chunks, kv_chunk, KV, D)
+    vc = v.reshape(B, n_chunks, kv_chunk, KV, D)
+    pc = k_pos.reshape(n_chunks, kv_chunk)
+
+    def body(carry, inp):
+        m_prev, l_prev, acc = carry
+        k_blk, v_blk, pos_blk = inp
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k_blk.astype(jnp.float32))
+        s = _softcap(s, p.logit_cap)
+        mask = _mask(q_pos, pos_blk, p)                   # (Sq, kc)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_cur = jnp.max(s, axis=-1)                       # (B,KV,G,Sq)
+        m_new = jnp.maximum(m_prev, m_cur)
+        # guard fully-masked rows (all -inf): keep m finite
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        alpha = jnp.exp(m_prev - m_safe)
+        alpha = jnp.where(jnp.isfinite(m_prev), alpha, 0.0)
+        pexp = jnp.exp(s - m_safe[..., None])
+        pexp = jnp.where(mask[None, None, None], pexp, 0.0)
+        l_new = l_prev * alpha + jnp.sum(pexp, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bkgqs,bskd->bkgqd", pexp, v_blk.astype(jnp.float32))
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((B, KV, G, Sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, KV, G, Sq), jnp.float32)
+    acc0 = jnp.zeros((B, KV, G, Sq, D), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, acc0),
+        (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0), pc))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    out = jnp.moveaxis(out, -2, 1)                        # (B,Sq,KV,G,D)
+    return out.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+def decode_attention(q: Array, k_cache: Array, v_cache: Array,
+                     q_pos: Array, p: AttnParams,
+                     cache_len: Optional[Array] = None) -> Array:
+    """Single-position decode: q (B, 1, H, D) vs cache (B, S, KV, D).
+
+    q_pos: (B,) current positions.  Keys at positions > q_pos (or outside
+    the sliding window) are masked; the cache may be longer than the valid
+    prefix.
+    """
+    B, _, H, D = q.shape
+    S = k_cache.shape[1]
+    KV = k_cache.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, D)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache,
+                   preferred_element_type=jnp.float32) * (D ** -0.5)
+    s = _softcap(s, p.logit_cap)
+    k_pos = jnp.arange(S)[None]                          # (1, S)
+    valid = k_pos <= q_pos[:, None]
+    if p.window is not None:
+        valid &= (q_pos[:, None] - k_pos) < p.window
+    s = jnp.where(valid[:, None, None], s, NEG_INF)
+    a = jax.nn.softmax(s, axis=-1).astype(v_cache.dtype)
+    out = jnp.einsum("bkgs,bskd->bkgd", a, v_cache)
+    return out.reshape(B, 1, H, D)

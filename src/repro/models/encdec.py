@@ -1,0 +1,245 @@
+"""Whisper-style encoder-decoder assembly (audio family).
+
+Encoder: bidirectional self-attention over stub frame embeddings (the
+conv/mel frontend is a stub per the assignment — ``input_specs`` provides
+(B, T_enc, d) precomputed embeddings).  Decoder: causal self-attention +
+cross-attention over encoder output + MLP.  LayerNorm/GELU per Whisper.
+
+Decode uses a self-attention KV cache plus *precomputed* cross-attention
+K/V (built once at prefill from the encoder output) — cross K/V never
+change during generation.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models.layers import apply_rope, dense_init, embed_init, layer_norm
+from repro.models.lm import (ModelOpts, chunked_ce_loss, materialize, mm,
+                             norm_param)
+
+Array = jax.Array
+
+
+def _ln(x, p, eps):
+    return layer_norm(x, p["scale"], p["bias"], eps)
+
+
+def _init_attn(rng, cfg: ArchConfig, L: int, prefix: str = "") -> Dict:
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(rng, 4)
+    return {
+        f"{prefix}wq": dense_init(ks[0], (L, d, H * hd)),
+        f"{prefix}wk": dense_init(ks[1], (L, d, KV * hd)),
+        f"{prefix}wv": dense_init(ks[2], (L, d, KV * hd)),
+        f"{prefix}wo": dense_init(ks[3], (L, H * hd, d)),
+    }
+
+
+def _init_mlp(rng, cfg: ArchConfig, L: int) -> Dict:
+    ks = jax.random.split(rng, 2)
+    return {
+        "w_up": dense_init(ks[0], (L, cfg.d_model, cfg.d_ff)),
+        "w_down": dense_init(ks[1], (L, cfg.d_ff, cfg.d_model)),
+    }
+
+
+def init_params_encdec(rng: Array, cfg: ArchConfig) -> Dict[str, Any]:
+    k = jax.random.split(rng, 8)
+    Le, Ld, d = cfg.enc_layers, cfg.dec_layers, cfg.d_model
+    enc = {"attn_norm": norm_param(cfg, Le, d),
+           "mlp_norm": norm_param(cfg, Le, d),
+           **_init_attn(k[0], cfg, Le), **_init_mlp(k[1], cfg, Le)}
+    dec = {"attn_norm": norm_param(cfg, Ld, d),
+           "cross_norm": norm_param(cfg, Ld, d),
+           "mlp_norm": norm_param(cfg, Ld, d),
+           **_init_attn(k[2], cfg, Ld),
+           **_init_attn(k[3], cfg, Ld, prefix="cross_"),
+           **_init_mlp(k[4], cfg, Ld)}
+    return {
+        "embed": embed_init(k[5], (cfg.vocab, d)),
+        "enc_layers": enc,
+        "dec_layers": dec,
+        "enc_final_norm": norm_param(cfg, d),
+        "final_norm": norm_param(cfg, d),
+        "lm_head": dense_init(k[6], (d, cfg.vocab)),
+    }
+
+
+def _mlp_apply(x, lp, cfg: ArchConfig):
+    h = jax.nn.gelu(mm(x, lp["w_up"]), approximate=True)
+    return mm(h, lp["w_down"])
+
+
+def _self_attn(x, lp, cfg: ArchConfig, opts: ModelOpts, positions, causal,
+               prefix="", kv_out=False):
+    B, S, _ = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = apply_rope(mm(x, lp[f"{prefix}wq"]).reshape(B, S, H, hd), positions,
+                   cfg.rope_theta)
+    k = apply_rope(mm(x, lp[f"{prefix}wk"]).reshape(B, S, KV, hd), positions,
+                   cfg.rope_theta)
+    v = mm(x, lp[f"{prefix}wv"]).reshape(B, S, KV, hd)
+    p = attn.AttnParams(window=None, logit_cap=None, causal=causal)
+    pos1d = positions[0]
+    if S >= opts.attn_chunked_min_len:
+        o = attn.chunked_attention(q, k, v, pos1d, pos1d, p,
+                                   kv_chunk=opts.kv_chunk)
+    else:
+        o = attn.full_attention(q, k, v, pos1d, pos1d, p)
+    o = mm(o.reshape(B, S, H * hd), lp[f"{prefix}wo"])
+    return (o, (k, v)) if kv_out else (o, None)
+
+
+def _cross_attn(x, enc_kv, lp, cfg: ArchConfig, opts: ModelOpts):
+    """Cross-attention: queries from decoder x, K/V precomputed from enc."""
+    B, S, _ = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    k, v = enc_kv
+    Te = k.shape[1]
+    q = mm(x, lp["cross_wq"]).reshape(B, S, H, hd)
+    p = attn.AttnParams(window=None, logit_cap=None, causal=False)
+    qpos = jnp.zeros((S,), jnp.int32)
+    kpos = jnp.zeros((Te,), jnp.int32)
+    o = attn.full_attention(q, k, v, qpos, kpos, p)
+    return mm(o.reshape(B, S, H * hd), lp["cross_wo"])
+
+
+def encode(params, cfg: ArchConfig, opts: ModelOpts, frames):
+    """frames (B, Te, d) stub embeddings -> encoder output (B, Te, d)."""
+    x = frames.astype(opts.compute_dtype)
+    B, Te, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(Te, dtype=jnp.int32)[None],
+                                 (B, Te))
+
+    def body(h, lp):
+        a, _ = _self_attn(_ln(h, lp["attn_norm"], cfg.norm_eps), lp, cfg,
+                          opts, positions, causal=False)
+        h = h + a
+        h = h + _mlp_apply(_ln(h, lp["mlp_norm"], cfg.norm_eps), lp, cfg)
+        return h, None
+
+    f = jax.checkpoint(body, prevent_cse=False) if opts.remat else body
+    x, _ = jax.lax.scan(f, x, params["enc_layers"])
+    return _ln(x, params["enc_final_norm"], cfg.norm_eps)
+
+
+def _decoder_stack(params, cfg, opts, x, positions, enc_out,
+                   collect_kv=False):
+    B = x.shape[0]
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    Te = enc_out.shape[1]
+
+    def body(h, lp):
+        a, kv = _self_attn(_ln(h, lp["attn_norm"], cfg.norm_eps), lp, cfg,
+                           opts, positions, causal=True, kv_out=collect_kv)
+        h = h + a
+        # cross K/V from encoder output (per decoder layer)
+        ek = mm(enc_out, lp["cross_wk"]).reshape(B, Te, KV, hd)
+        ev = mm(enc_out, lp["cross_wv"]).reshape(B, Te, KV, hd)
+        h = h + _cross_attn(_ln(h, lp["cross_norm"], cfg.norm_eps),
+                            (ek, ev), lp, cfg, opts)
+        h = h + _mlp_apply(_ln(h, lp["mlp_norm"], cfg.norm_eps), lp, cfg)
+        out = (kv, (ek, ev)) if collect_kv else None
+        return h, out
+
+    f = jax.checkpoint(body, prevent_cse=False) if opts.remat else body
+    return jax.lax.scan(f, x, params["dec_layers"])
+
+
+def forward_train_encdec(params, cfg: ArchConfig, opts: ModelOpts, batch):
+    enc_out = encode(params, cfg, opts, batch["frames"])
+    tokens = batch["tokens"]
+    x = jnp.take(materialize(params["embed"], opts.compute_dtype), tokens,
+                 axis=0)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    x, _ = _decoder_stack(params, cfg, opts, x, positions, enc_out)
+    x = _ln(x, params["final_norm"], cfg.norm_eps)
+    return chunked_ce_loss(x, params["lm_head"], batch["targets"], cfg, opts)
+
+
+def forward_prefill_encdec(params, cfg: ArchConfig, opts: ModelOpts, batch):
+    """Encode + teacher-forced decoder prefill; returns logits + caches."""
+    enc_out = encode(params, cfg, opts, batch["frames"])
+    tokens = batch["tokens"]
+    x = jnp.take(materialize(params["embed"], opts.compute_dtype), tokens,
+                 axis=0)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    x, (self_kv, cross_kv) = _decoder_stack(params, cfg, opts, x, positions,
+                                            enc_out, collect_kv=True)
+    x = _ln(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.dot(x[:, -1], materialize(params["lm_head"], x.dtype),
+                     preferred_element_type=jnp.float32)
+    k, v = self_kv
+    ck, cv = cross_kv
+    return logits, {"k": k, "v": v, "cross_k": ck, "cross_v": cv}
+
+
+def cache_specs_encdec(cfg: ArchConfig, batch: int, max_len: int,
+                       enc_len: int, dtype=jnp.bfloat16):
+    Ld, KV, hd = cfg.dec_layers, cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jax.ShapeDtypeStruct((Ld, batch, max_len, KV, hd), dtype),
+        "v": jax.ShapeDtypeStruct((Ld, batch, max_len, KV, hd), dtype),
+        "cross_k": jax.ShapeDtypeStruct((Ld, batch, enc_len, KV, hd), dtype),
+        "cross_v": jax.ShapeDtypeStruct((Ld, batch, enc_len, KV, hd), dtype),
+    }
+
+
+def init_cache_encdec(cfg: ArchConfig, batch: int, max_len: int,
+                      enc_len: int, dtype=jnp.bfloat16):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_specs_encdec(cfg, batch, max_len, enc_len,
+                                           dtype))
+
+
+def decode_step_encdec(params, cfg: ArchConfig, opts: ModelOpts, cache,
+                       tokens, positions):
+    B = tokens.shape[0]
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    x = jnp.take(materialize(params["embed"], opts.compute_dtype), tokens,
+                 axis=0)
+    pos2d = positions[:, None]
+    barange = jnp.arange(B)
+
+    def body(h, inp):
+        lp, k_cache, v_cache, ck, cv = inp
+        hn = _ln(h, lp["attn_norm"], cfg.norm_eps)
+        q = apply_rope(mm(hn, lp["wq"]).reshape(B, 1, H, hd), pos2d,
+                       cfg.rope_theta)
+        k = apply_rope(mm(hn, lp["wk"]).reshape(B, 1, KV, hd), pos2d,
+                       cfg.rope_theta)
+        v = mm(hn, lp["wv"]).reshape(B, 1, KV, hd)
+        k_cache = k_cache.at[barange, positions].set(
+            k[:, 0].astype(k_cache.dtype))
+        v_cache = v_cache.at[barange, positions].set(
+            v[:, 0].astype(v_cache.dtype))
+        p = attn.AttnParams(causal=True)
+        o = attn.decode_attention(q, k_cache, v_cache, positions, p)
+        h = h + mm(o.reshape(B, 1, H * hd), lp["wo"])
+        # cross attention against precomputed encoder K/V (always valid)
+        hc = _ln(h, lp["cross_norm"], cfg.norm_eps)
+        qc = mm(hc, lp["cross_wq"]).reshape(B, 1, H, hd)
+        pc = attn.AttnParams(causal=False)
+        Te = ck.shape[1]
+        oc = attn.decode_attention(qc, ck, cv,
+                                   jnp.full((B,), Te - 1, jnp.int32), pc)
+        h = h + mm(oc.reshape(B, 1, H * hd), lp["cross_wo"])
+        h = h + _mlp_apply(_ln(h, lp["mlp_norm"], cfg.norm_eps), lp, cfg)
+        return h, (k_cache, v_cache)
+
+    x, (k_new, v_new) = jax.lax.scan(
+        body, x, (params["dec_layers"], cache["k"], cache["v"],
+                  cache["cross_k"], cache["cross_v"]))
+    x = _ln(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.dot(x[:, 0], materialize(params["lm_head"], x.dtype),
+                     preferred_element_type=jnp.float32)
+    return logits, {"k": k_new, "v": v_new, "cross_k": cache["cross_k"],
+                    "cross_v": cache["cross_v"]}

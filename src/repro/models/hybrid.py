@@ -1,0 +1,356 @@
+"""Mamba-2 (ssm) and Zamba2 (hybrid) model assemblies.
+
+mamba2  : pure stack of Mamba-2 blocks (attention-free; decode state O(1)).
+zamba2  : Mamba-2 backbone with a *weight-shared* attention+MLP block
+          applied every ``attn_every`` layers (9 applications for 54/6).
+          Deviations (DESIGN.md Sec. 4): per-invocation LoRA deltas and the
+          embedding-concat input of the real model are omitted — pure
+          weight sharing with standard residuals.
+
+Layer scan structure for zamba2: the (54, ...) stacked Mamba parameters are
+reshaped to (groups, attn_every, ...) and a nested scan runs
+``attn_every`` Mamba blocks per outer step, followed by the shared
+attention block (captured as a closure constant — the weights really are
+the same array each application, so XLA emits one parameter buffer).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models import ssm as ssm_lib
+from repro.models.layers import apply_rope, dense_init, embed_init, rms_norm
+from repro.models.lm import (ModelOpts, _maybe_quant_act, chunked_ce_loss,
+                             materialize, mm, softcap)
+
+Array = jax.Array
+
+
+def ssm_dims(cfg: ArchConfig) -> ssm_lib.SSMDims:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    return ssm_lib.SSMDims(
+        d_model=cfg.d_model, d_inner=d_inner,
+        n_heads=d_inner // cfg.ssm_headdim, headdim=cfg.ssm_headdim,
+        state=cfg.ssm_state, d_conv=cfg.ssm_dconv)
+
+
+def _init_mamba_layers(rng: Array, cfg: ArchConfig, L: int) -> Dict[str, Any]:
+    dims = ssm_dims(cfg)
+    keys = jax.random.split(rng, 4)
+    nh = dims.n_heads
+    # dt bias initialised so softplus(dt) spans ~[1e-3, 1e-1] (mamba conv.)
+    dt = jnp.exp(jax.random.uniform(keys[2], (L, nh)) *
+                 (jnp.log(0.1) - jnp.log(0.001)) + jnp.log(0.001))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))
+    A = jnp.broadcast_to(jnp.arange(1, nh + 1, dtype=jnp.float32), (L, nh))
+    return {
+        "pre_norm": jnp.ones((L, cfg.d_model), jnp.float32),
+        "in_proj": dense_init(keys[0], (L, cfg.d_model, dims.in_proj_out)),
+        "conv_w": dense_init(keys[1], (L, dims.conv_channels, dims.d_conv),
+                             in_axis=-1),
+        "conv_b": jnp.zeros((L, dims.conv_channels), jnp.float32),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "A_log": jnp.log(A),
+        "D": jnp.ones((L, nh), jnp.float32),
+        "norm_scale": jnp.ones((L, dims.d_inner), jnp.float32),
+        "out_proj": dense_init(keys[3], (L, dims.d_inner, cfg.d_model)),
+    }
+
+
+def _mamba_layer_apply(x, lp, cfg: ArchConfig, opts: ModelOpts,
+                       state_out: bool = False):
+    from repro.models.lm import shard_act
+    dims = ssm_dims(cfg)
+    h = rms_norm(x, lp["pre_norm"], cfg.norm_eps)
+    p = {k: (materialize(v, x.dtype) if k in ("in_proj", "out_proj") else v)
+         for k, v in lp.items()}
+    out = ssm_lib.mamba2_block(h, p, dims, chunk=opts.ssd_chunk,
+                               shard_fn=lambda a, *ax: shard_act(a, opts,
+                                                                 *ax),
+                               state_out=state_out)
+    if state_out:
+        y, conv_c, ssm_c = out
+        return _maybe_quant_act(x + y, opts), (conv_c, ssm_c)
+    return _maybe_quant_act(x + out, opts)
+
+
+# --------------------------------------------------------------------------
+# mamba2 (pure SSM)
+# --------------------------------------------------------------------------
+
+def init_params_mamba(rng: Array, cfg: ArchConfig) -> Dict[str, Any]:
+    k1, k2, k3 = jax.random.split(rng, 3)
+    return {
+        "embed": embed_init(k1, (cfg.vocab, cfg.d_model)),
+        "layers": _init_mamba_layers(k2, cfg, cfg.n_layers),
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        "lm_head": dense_init(k3, (cfg.d_model, cfg.vocab)),
+    }
+
+
+def forward_train_mamba(params, cfg: ArchConfig, opts: ModelOpts, batch):
+    x = jnp.take(materialize(params["embed"], opts.compute_dtype),
+                 batch["tokens"], axis=0)
+
+    def body(h, lp):
+        return _mamba_layer_apply(h, lp, cfg, opts), None
+
+    f = jax.checkpoint(body, prevent_cse=False) if opts.remat else body
+    x, _ = jax.lax.scan(f, x, params["layers"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return chunked_ce_loss(x, params["lm_head"], batch["targets"], cfg, opts)
+
+
+def prefill_mamba(params, cfg: ArchConfig, opts: ModelOpts, batch):
+    """Run the prompt through the SSM stack, emitting last-token logits and
+    the per-layer (conv, ssm) states as the decode cache."""
+    x = jnp.take(materialize(params["embed"], opts.compute_dtype),
+                 batch["tokens"], axis=0)
+
+    def body(h, lp):
+        h, state = _mamba_layer_apply(h, lp, cfg, opts, state_out=True)
+        return h, state
+
+    f = jax.checkpoint(body, prevent_cse=False) if opts.remat else body
+    x, (conv_c, ssm_c) = jax.lax.scan(f, x, params["layers"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.dot(x[:, -1], materialize(params["lm_head"], x.dtype),
+                     preferred_element_type=jnp.float32)
+    return logits, {"conv": conv_c.astype(x.dtype), "ssm": ssm_c}
+
+
+def prefill_zamba(params, cfg: ArchConfig, opts: ModelOpts, batch,
+                  pad_to=None):
+    """Zamba2 prefill: SSM states + shared-attention KV per group."""
+    x = jnp.take(materialize(params["embed"], opts.compute_dtype),
+                 batch["tokens"], axis=0)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    grouped = _grouped_mamba(params, cfg)
+    shared = params["shared"]
+
+    def inner(h, lp):
+        return _mamba_layer_apply(h, lp, cfg, opts, state_out=True)
+
+    inner_f = jax.checkpoint(inner, prevent_cse=False) if opts.remat else inner
+
+    def outer(h, glp):
+        h, states = jax.lax.scan(inner_f, h, glp)
+        h, kv = _shared_attn_apply(h, shared, cfg, opts, positions,
+                                   kv_out=True)
+        return h, (states, kv)
+
+    x, ((conv_g, ssm_g), (k, v)) = jax.lax.scan(outer, x, grouped)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.dot(x[:, -1], materialize(params["lm_head"], x.dtype),
+                     preferred_element_type=jnp.float32)
+    L = cfg.n_layers
+    conv = conv_g.reshape((L,) + conv_g.shape[2:]).astype(x.dtype)
+    ssm = ssm_g.reshape((L,) + ssm_g.shape[2:])
+    if pad_to and pad_to > S:
+        pad = [(0, 0), (0, 0), (0, pad_to - S), (0, 0), (0, 0)]
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+    return logits, {"conv": conv, "ssm": ssm,
+                    "k": k.astype(x.dtype), "v": v.astype(x.dtype)}
+
+
+def init_cache_mamba(cfg: ArchConfig, batch: int, dtype=jnp.bfloat16):
+    dims = ssm_dims(cfg)
+    L = cfg.n_layers
+    return {
+        "conv": jnp.zeros((L, batch, dims.d_conv - 1, dims.conv_channels),
+                          dtype),
+        "ssm": jnp.zeros((L, batch, dims.n_heads, dims.headdim, dims.state),
+                         jnp.float32),
+    }
+
+
+def cache_specs_mamba(cfg: ArchConfig, batch: int, dtype=jnp.bfloat16):
+    return jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                        jax.eval_shape(lambda: init_cache_mamba(cfg, batch,
+                                                                dtype)))
+
+
+def decode_step_mamba(params, cfg: ArchConfig, opts: ModelOpts, cache,
+                      tokens, positions):
+    dims = ssm_dims(cfg)
+    x = jnp.take(materialize(params["embed"], opts.compute_dtype),
+                 tokens, axis=0)                          # (B, 1, d)
+
+    def body(h, inp):
+        lp, conv_c, ssm_c = inp
+        hn = rms_norm(h, lp["pre_norm"], cfg.norm_eps)
+        p = {k: (materialize(v, h.dtype) if k in ("in_proj", "out_proj")
+                 else v) for k, v in lp.items()}
+        y, conv_c, ssm_c = ssm_lib.mamba2_decode(hn, p, dims, conv_c, ssm_c)
+        return h + y, (conv_c, ssm_c)
+
+    x, (conv_new, ssm_new) = jax.lax.scan(
+        body, x, (params["layers"], cache["conv"], cache["ssm"]))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.dot(x[:, 0], materialize(params["lm_head"], x.dtype),
+                     preferred_element_type=jnp.float32)
+    return logits, {"conv": conv_new, "ssm": ssm_new}
+
+
+# --------------------------------------------------------------------------
+# zamba2 (hybrid)
+# --------------------------------------------------------------------------
+
+def init_params_zamba(rng: Array, cfg: ArchConfig) -> Dict[str, Any]:
+    k1, k2, k3, k4 = jax.random.split(rng, 4)
+    d, H, KV, hd, f = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                       cfg.head_dim, cfg.d_ff)
+    ks = jax.random.split(k3, 8)
+    shared = {
+        "attn_norm": jnp.ones((d,), jnp.float32),
+        "wq": dense_init(ks[0], (d, H * hd)),
+        "wk": dense_init(ks[1], (d, KV * hd)),
+        "wv": dense_init(ks[2], (d, KV * hd)),
+        "wo": dense_init(ks[3], (H * hd, d)),
+        "mlp_norm": jnp.ones((d,), jnp.float32),
+        "w_gate": dense_init(ks[4], (d, f)),
+        "w_up": dense_init(ks[5], (d, f)),
+        "w_down": dense_init(ks[6], (f, d)),
+    }
+    return {
+        "embed": embed_init(k1, (cfg.vocab, d)),
+        "layers": _init_mamba_layers(k2, cfg, cfg.n_layers),
+        "shared": shared,
+        "final_norm": jnp.ones((d,), jnp.float32),
+        "lm_head": dense_init(k4, (d, cfg.vocab)),
+    }
+
+
+def _shared_attn_apply(x, sp, cfg: ArchConfig, opts: ModelOpts, positions,
+                       kv_out: bool = False):
+    B, S, d = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    h = rms_norm(x, sp["attn_norm"], cfg.norm_eps)
+    q = apply_rope(mm(h, sp["wq"]).reshape(B, S, H, hd), positions,
+                   cfg.rope_theta)
+    k = apply_rope(mm(h, sp["wk"]).reshape(B, S, KV, hd), positions,
+                   cfg.rope_theta)
+    v = mm(h, sp["wv"]).reshape(B, S, KV, hd)
+    p = attn.AttnParams(window=None, logit_cap=None, causal=True)
+    pos1d = positions[0]
+    if S >= opts.attn_chunked_min_len:
+        o = attn.chunked_attention(q, k, v, pos1d, pos1d, p,
+                                   kv_chunk=opts.kv_chunk)
+    else:
+        o = attn.full_attention(q, k, v, pos1d, pos1d, p)
+    x = x + mm(o.reshape(B, S, H * hd), sp["wo"])
+    hm = rms_norm(x, sp["mlp_norm"], cfg.norm_eps)
+    g = jax.nn.silu(mm(hm, sp["w_gate"])) * mm(hm, sp["w_up"])
+    x = x + mm(g, sp["w_down"])
+    return (x, (k, v)) if kv_out else (x, None)
+
+
+def _grouped_mamba(params, cfg: ArchConfig):
+    """Reshape stacked (L, ...) mamba params to (groups, attn_every, ...)."""
+    g = cfg.n_layers // cfg.attn_every
+    return jax.tree.map(
+        lambda a: a.reshape((g, cfg.attn_every) + a.shape[1:]),
+        params["layers"])
+
+
+def forward_train_zamba(params, cfg: ArchConfig, opts: ModelOpts, batch):
+    x = jnp.take(materialize(params["embed"], opts.compute_dtype),
+                 batch["tokens"], axis=0)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    grouped = _grouped_mamba(params, cfg)
+    shared = params["shared"]
+
+    def inner(h, lp):
+        return _mamba_layer_apply(h, lp, cfg, opts), None
+
+    inner_f = jax.checkpoint(inner, prevent_cse=False) if opts.remat else inner
+
+    def outer(h, glp):
+        h, _ = jax.lax.scan(inner_f, h, glp)
+        h, _ = _shared_attn_apply(h, shared, cfg, opts, positions)
+        return h, None
+
+    x, _ = jax.lax.scan(outer, x, grouped)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return chunked_ce_loss(x, params["lm_head"], batch["targets"], cfg, opts)
+
+
+def init_cache_zamba(cfg: ArchConfig, batch: int, max_len: int,
+                     dtype=jnp.bfloat16):
+    base = init_cache_mamba(cfg, batch, dtype)
+    g = cfg.n_layers // cfg.attn_every
+    base["k"] = jnp.zeros((g, batch, max_len, cfg.n_kv_heads, cfg.head_dim),
+                          dtype)
+    base["v"] = jnp.zeros_like(base["k"])
+    return base
+
+
+def cache_specs_zamba(cfg: ArchConfig, batch: int, max_len: int,
+                      dtype=jnp.bfloat16):
+    return jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                        jax.eval_shape(lambda: init_cache_zamba(
+                            cfg, batch, max_len, dtype)))
+
+
+def decode_step_zamba(params, cfg: ArchConfig, opts: ModelOpts, cache,
+                      tokens, positions):
+    dims = ssm_dims(cfg)
+    B = tokens.shape[0]
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    x = jnp.take(materialize(params["embed"], opts.compute_dtype),
+                 tokens, axis=0)
+    grouped = _grouped_mamba(params, cfg)
+    gconv = cache["conv"].reshape((-1, cfg.attn_every) + cache["conv"].shape[1:])
+    gssm = cache["ssm"].reshape((-1, cfg.attn_every) + cache["ssm"].shape[1:])
+    shared = params["shared"]
+    pos2d = positions[:, None]
+    barange = jnp.arange(B)
+
+    def inner(h, inp):
+        lp, conv_c, ssm_c = inp
+        hn = rms_norm(h, lp["pre_norm"], cfg.norm_eps)
+        p = {k: (materialize(v, h.dtype) if k in ("in_proj", "out_proj")
+                 else v) for k, v in lp.items()}
+        y, conv_c, ssm_c = ssm_lib.mamba2_decode(hn, p, dims, conv_c, ssm_c)
+        return h + y, (conv_c, ssm_c)
+
+    def outer(h, inp):
+        glp, conv_g, ssm_g, k_cache, v_cache = inp
+        h, (conv_g, ssm_g) = jax.lax.scan(inner, h, (glp, conv_g, ssm_g))
+        hn = rms_norm(h, shared["attn_norm"], cfg.norm_eps)
+        q = apply_rope(mm(hn, shared["wq"]).reshape(B, 1, H, hd), pos2d,
+                       cfg.rope_theta)
+        k = apply_rope(mm(hn, shared["wk"]).reshape(B, 1, KV, hd), pos2d,
+                       cfg.rope_theta)
+        v = mm(hn, shared["wv"]).reshape(B, 1, KV, hd)
+        k_cache = k_cache.at[barange, positions].set(
+            k[:, 0].astype(k_cache.dtype))
+        v_cache = v_cache.at[barange, positions].set(
+            v[:, 0].astype(v_cache.dtype))
+        p = attn.AttnParams(window=None, logit_cap=None, causal=True)
+        o = attn.decode_attention(q, k_cache, v_cache, positions, p)
+        h = h + mm(o.reshape(B, 1, H * hd), shared["wo"])
+        hm = rms_norm(h, shared["mlp_norm"], cfg.norm_eps)
+        g = jax.nn.silu(mm(hm, shared["w_gate"])) * mm(hm, shared["w_up"])
+        h = h + mm(g, shared["w_down"])
+        return h, (conv_g, ssm_g, k_cache, v_cache)
+
+    x, (conv_new, ssm_new, k_new, v_new) = jax.lax.scan(
+        outer, x, (grouped, gconv, gssm, cache["k"], cache["v"]))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.dot(x[:, 0], materialize(params["lm_head"], x.dtype),
+                     preferred_element_type=jnp.float32)
+    new_cache = {
+        "conv": conv_new.reshape(cache["conv"].shape),
+        "ssm": ssm_new.reshape(cache["ssm"].shape),
+        "k": k_new, "v": v_new,
+    }
+    return logits, new_cache

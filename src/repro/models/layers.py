@@ -1,0 +1,107 @@
+"""Shared building blocks: norms, RoPE, MLPs, initializers.
+
+Conventions:
+  * activations are (B, S, D), compute dtype bf16 (configurable);
+  * parameters are stored fp32 (master) and cast at use;
+  * stacked per-layer parameters carry a leading (L,) axis (lax.scan).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+# --------------------------------------------------------------------------
+# Norms
+# --------------------------------------------------------------------------
+
+def rms_norm(x: Array, scale: Array, eps: float = 1e-6,
+             zero_centered: bool = False) -> Array:
+    """RMSNorm; ``zero_centered`` uses (1 + scale) (gemma convention)."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    s = (1.0 + scale) if zero_centered else scale
+    return (x * s.astype(jnp.float32)).astype(dtype)
+
+
+def layer_norm(x: Array, scale: Array, bias: Array, eps: float = 1e-5) -> Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * scale.astype(jnp.float32)
+            + bias.astype(jnp.float32)).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# Rotary position embedding
+# --------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> Array:
+    """(head_dim//2,) inverse frequencies."""
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)
+
+
+def apply_rope(x: Array, positions: Array, theta: float = 10000.0) -> Array:
+    """x: (B, S, H, D) with even D; positions: (B, S) int32."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, D/2)
+    cos = jnp.cos(angles)[:, :, None, :]               # (B, S, 1, D/2)
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# MLPs
+# --------------------------------------------------------------------------
+
+def swiglu(x: Array, gate_w: Array, up_w: Array, down_w: Array,
+           act: str = "silu") -> Array:
+    """Gated MLP: down( act(x @ gate) * (x @ up) )."""
+    dtype = x.dtype
+    g = jnp.dot(x, gate_w.astype(dtype))
+    u = jnp.dot(x, up_w.astype(dtype))
+    if act == "silu":
+        g = jax.nn.silu(g)
+    elif act == "gelu":
+        g = jax.nn.gelu(g, approximate=True)
+    else:
+        raise ValueError(act)
+    return jnp.dot(g * u, down_w.astype(dtype))
+
+
+def softcap(x: Array, cap: Optional[float]) -> Array:
+    """gemma-2 logit soft-capping: cap * tanh(x / cap)."""
+    if cap is None or cap <= 0:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Initializers
+# --------------------------------------------------------------------------
+
+def dense_init(rng: Array, shape, in_axis: int = -2,
+               dtype=jnp.float32) -> Array:
+    """LeCun-normal in the matmul reduction dimension."""
+    fan_in = shape[in_axis]
+    std = (1.0 / fan_in) ** 0.5
+    return (jax.random.truncated_normal(rng, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def embed_init(rng: Array, shape, dtype=jnp.float32) -> Array:
+    return (jax.random.truncated_normal(rng, -2.0, 2.0, shape, jnp.float32)
+            * 0.02).astype(dtype)

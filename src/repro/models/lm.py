@@ -1,0 +1,634 @@
+"""Decoder-only LM assembly (dense / MoE / VLM-stub families).
+
+Layers are scan-stacked: every per-layer parameter carries a leading (L,)
+axis and the forward pass is one ``lax.scan`` over layers — this keeps the
+lowered HLO size O(1) in depth (61-layer / 1T-param configs compile in
+minutes on one CPU core) and gives the UNIQ gradual schedule a natural
+per-layer mode vector.
+
+Serving-time weights may be k-quantile-coded: any weight leaf replaced by a
+``{"q_codes", "q_mu", "q_sigma"}`` dict (see ``quantize_params_for_serving``)
+is dequantized on the fly inside the layer body — on TPU through the fused
+qmatmul Pallas kernel, elsewhere through the jnp reference (XLA fuses the
+dequant into the matmul operand).  HBM weight traffic drops 4x for W4.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core import packing
+from repro.kernels import ref as kref
+from repro.models import attention as attn
+from repro.models import moe as moe_lib
+from repro.models.layers import (apply_rope, dense_init, embed_init,
+                                 layer_norm, rms_norm, softcap, swiglu)
+
+Array = jax.Array
+
+BIG_WINDOW = 1 << 30
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelOpts:
+    """Runtime (non-architecture) options."""
+    compute_dtype: Any = jnp.bfloat16
+    a_bits: int = 32                  # activation fake-quant (32 = off)
+    remat: bool = True                # checkpoint each scan layer
+    kv_chunk: int = 1024              # chunked-attention KV block
+    attn_chunked_min_len: int = 8192  # use chunked attention above this S
+    ssd_chunk: int = 128
+    ce_chunk: int = 1024              # cross-entropy chunk along S
+    moe_axis: Optional[str] = None    # 'model' => shard_map EP (needs mesh)
+    mesh: Any = None                  # jax Mesh for explicit-EP regions
+    fsdp_axes: tuple = ("data",)      # axes expert weights are FSDP-sharded on
+    manual_axes: tuple = ()           # mesh axes already manual (shard_map)
+    serve_w_bits: int = 16            # 4/8 => quantized serving weights
+    moe_mode: str = "gather"          # gather: all-gather FSDP'd expert
+                                      #   weights per layer (baseline);
+                                      # reduce: keep d_ff sharded over data,
+                                      #   psum partial outputs instead —
+                                      #   kills the per-layer weight gathers
+                                      #   (EXPERIMENTS.md Perf iteration)
+    uniq: Any = None                  # UniqConfig => apply the UNIQ weight
+                                      #   transform INSIDE the layer scan
+                                      #   (per-layer transient, remat'd)
+                                      #   instead of on the whole tree
+    dp_includes_model: bool = False   # fsdp-only layout: batch over
+                                      #   (pod,data,model); 'tp' constraints
+                                      #   become no-ops
+
+
+# --------------------------------------------------------------------------
+# Activation sharding constraints
+# --------------------------------------------------------------------------
+
+def shard_act(x: Array, opts: "ModelOpts", *axes) -> Array:
+    """Constrain an activation's sharding ('dp'/'tp' sentinels per dim).
+
+    No-op when opts.mesh is None (CPU tests).  Divisibility-checked so odd
+    dims (B=1 decode, KV heads < tp) degrade to replicated instead of
+    erroring — matching the parameter-rule behaviour.
+    """
+    mesh = opts.mesh
+    if mesh is None:
+        return x
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    dp_names = ("pod", "data", "model") if opts.dp_includes_model \
+        else ("pod", "data")
+    resolved = []
+    for i, a in enumerate(axes):
+        if a == "dp":
+            dp = [ax for ax in dp_names if ax in mesh.axis_names
+                  and ax not in opts.manual_axes]
+            while dp and x.shape[i] % int(
+                    np.prod([mesh.shape[ax] for ax in dp])):
+                dp.pop()
+            resolved.append(tuple(dp) if dp else None)
+        elif a == "tp":
+            ok = ("model" in mesh.axis_names
+                  and not opts.dp_includes_model
+                  and x.shape[i] % mesh.shape["model"] == 0)
+            resolved.append("model" if ok else None)
+        else:
+            resolved.append(None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*resolved)))
+
+
+# --------------------------------------------------------------------------
+# Quantized-weight matmul dispatch
+# --------------------------------------------------------------------------
+
+def is_qweight(w) -> bool:
+    return isinstance(w, dict) and "q_codes" in w
+
+
+def materialize(w, dtype):
+    """Return a dense (possibly dequantized) weight in compute dtype."""
+    if not is_qweight(w):
+        return w.astype(dtype)
+    codes = w["q_codes"]
+    bits = 4 if codes.dtype == jnp.uint8 else 8
+    if bits == 4:
+        codes = packing.unpack_int4(codes)
+    return kref.kquantile_dequant_ref(codes, w["q_mu"], w["q_sigma"],
+                                      2 ** bits, dtype=dtype)
+
+
+def mm(x: Array, w) -> Array:
+    """x @ w where w is a dense array or a quantized-weight dict."""
+    return jnp.dot(x, materialize(w, x.dtype))
+
+
+def quantize_params_for_serving(params, bits: int, quant_filter=None,
+                                per_channel: bool = True,
+                                stacked_prefixes=("layers", "enc_layers",
+                                                  "dec_layers")):
+    """Replace eligible weight leaves by k-quantile code dicts (see uniq)."""
+    from repro.core.uniq import (_stats_axes, default_quant_filter,
+                                 fit_gaussian, path_str)
+    from repro.core import quantizers as Q
+    quant_filter = quant_filter or default_quant_filter
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for kp, leaf in flat:
+        p = path_str(kp)
+        if not quant_filter(p, leaf) or leaf.shape[-1] % 2:
+            out.append(leaf)
+            continue
+        stacked = any(p.startswith(pre) for pre in stacked_prefixes)
+        model = fit_gaussian(leaf, _stats_axes(leaf, per_channel, stacked))
+        codes = Q.kquantile_quantize(leaf, model, 2 ** bits,
+                                     code_dtype=jnp.int32)
+        stored = (packing.pack_int4(codes) if bits == 4
+                  else (codes - 128).astype(jnp.int8))
+        out.append({"q_codes": stored,
+                    "q_mu": model.mu.astype(jnp.float32),
+                    "q_sigma": model.sigma.astype(jnp.float32)})
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# --------------------------------------------------------------------------
+# Parameter initialization
+# --------------------------------------------------------------------------
+
+def norm_param(cfg: ArchConfig, *shape):
+    """Norm parameter(s): dict for LayerNorm, bare scale for RMSNorm."""
+    if cfg.norm_kind == "layer":
+        return {"scale": jnp.ones(shape, jnp.float32),
+                "bias": jnp.zeros(shape, jnp.float32)}
+    return jnp.ones(shape, jnp.float32)
+
+
+def init_params(rng: Array, cfg: ArchConfig) -> Dict[str, Any]:
+    """Decoder-only parameter tree (dense / moe / vlm families)."""
+    L, d, f, V = cfg.n_layers, cfg.d_model, cfg.d_ff, cfg.vocab
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    keys = jax.random.split(rng, 16)
+
+    layers: Dict[str, Any] = {
+        "attn_norm": norm_param(cfg, L, d),
+        "wq": dense_init(keys[0], (L, d, H * hd)),
+        "wk": dense_init(keys[1], (L, d, KV * hd)),
+        "wv": dense_init(keys[2], (L, d, KV * hd)),
+        "wo": dense_init(keys[3], (L, H * hd, d)),
+        "mlp_norm": norm_param(cfg, L, d),
+    }
+    if cfg.post_norms:
+        layers["post_attn_norm"] = jnp.ones((L, d), jnp.float32)
+        layers["post_mlp_norm"] = jnp.ones((L, d), jnp.float32)
+    if cfg.is_moe:
+        E = cfg.n_experts
+        layers["router"] = dense_init(keys[4], (L, d, E))
+        layers["eg"] = dense_init(keys[5], (L, E, d, f))
+        layers["eu"] = dense_init(keys[6], (L, E, d, f))
+        layers["ed"] = dense_init(keys[7], (L, E, f, d), in_axis=-2)
+    else:
+        layers["w_gate"] = dense_init(keys[5], (L, d, f))
+        layers["w_up"] = dense_init(keys[6], (L, d, f))
+        layers["w_down"] = dense_init(keys[7], (L, f, d))
+
+    params: Dict[str, Any] = {
+        "embed": embed_init(keys[8], (V, d)),
+        "layers": layers,
+        "final_norm": norm_param(cfg, d),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(keys[9], (d, V))
+    return params
+
+
+# --------------------------------------------------------------------------
+# Layer body
+# --------------------------------------------------------------------------
+
+def _norm(x, scale_or_dict, cfg: ArchConfig):
+    if cfg.norm_kind == "layer":
+        return layer_norm(x, scale_or_dict["scale"], scale_or_dict["bias"],
+                          cfg.norm_eps)
+    zc = cfg.post_norms  # gemma-2 convention: zero-centered scales
+    return rms_norm(x, scale_or_dict, cfg.norm_eps, zero_centered=zc)
+
+
+def _window_schedule(cfg: ArchConfig) -> jnp.ndarray:
+    """(L,) per-layer attention window (BIG_WINDOW = global)."""
+    import numpy as np
+    w = np.full((cfg.n_layers,), BIG_WINDOW, np.int32)
+    if cfg.sliding_window and cfg.local_global_alternate:
+        w[0::2] = cfg.sliding_window      # even layers local (gemma-2)
+    elif cfg.sliding_window:
+        w[:] = cfg.sliding_window
+    return jnp.asarray(w)
+
+
+def _attn_block(x, lp, cfg: ArchConfig, opts: ModelOpts, positions, window,
+                kv_out: bool = False):
+    """Self-attention sub-block on (B, S, d).  Returns (out, (k, v))."""
+    B, S, d = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    h = _norm(x, lp["attn_norm"], cfg)
+    q = shard_act(mm(h, lp["wq"]).reshape(B, S, H, hd),
+                  opts, "dp", None, "tp", None)
+    k = shard_act(mm(h, lp["wk"]).reshape(B, S, KV, hd),
+                  opts, "dp", None, "tp", None)
+    v = shard_act(mm(h, lp["wv"]).reshape(B, S, KV, hd),
+                  opts, "dp", None, "tp", None)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    p = attn.AttnParams(window=window, logit_cap=cfg.attn_logit_cap,
+                        causal=True)
+    pos1d = positions[0]
+    if S >= opts.attn_chunked_min_len:
+        o = attn.chunked_attention(q, k, v, pos1d, pos1d, p,
+                                   kv_chunk=opts.kv_chunk)
+    else:
+        o = attn.full_attention(q, k, v, pos1d, pos1d, p)
+    o = shard_act(o.reshape(B, S, H * hd), opts, "dp", None, "tp")
+    o = shard_act(mm(o, lp["wo"]), opts, "dp", None, None)
+    if cfg.post_norms:
+        o = _norm(o, lp["post_attn_norm"], cfg)
+    return o, ((k, v) if kv_out else None)
+
+
+def _moe_ep_sharded(h, router_w, eg, eu, ed, mcfg, opts: ModelOpts):
+    """Expert-parallel MoE under shard_map (DESIGN.md Sec. 5).
+
+    Experts sharded over `model` (E_l = E/tp per shard); two FSDP layouts:
+
+    gather (baseline): d_ff sharded over ``opts.fsdp_axes``; weights
+      all-gathered inside the region per layer, tokens stay batch-sharded
+      over the DP axes.  Weight traffic per layer = full expert bytes.
+
+    reduce: d_ff *stays* sharded; every data shard computes a partial-f
+      SwiGLU for all of its pod's tokens (silu/mul are elementwise in f, so
+      partial-f is exact) and the (T, d) output partial-sums are psummed
+      over (model, data).  Weight traffic: zero; extra activation psum:
+      T x d — a huge win when T is small (decode/serve) relative to the
+      per-layer expert bytes.  See EXPERIMENTS.md Perf iterations.
+    """
+    from jax.sharding import PartitionSpec as P
+    mesh = opts.mesh
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names
+               and a not in opts.manual_axes)
+    B = h.shape[0]
+    import numpy as np
+    fa = tuple(a for a in opts.fsdp_axes if a in mesh.axis_names)
+    f_in = fa if fa else None
+
+    if opts.moe_mode == "reduce" and fa:
+        # batch sharded over pod only; data axis holds f-slices
+        dp_r = tuple(a for a in dp if a not in fa)
+        dpn = int(np.prod([mesh.shape[a] for a in dp_r])) if dp_r else 1
+        bspec = dp_r if (dp_r and B % dpn == 0) else None
+
+        fa_n = int(np.prod([mesh.shape[a] for a in fa]))
+        tp_n = mesh.shape["model"]
+
+        def wspec(w, f_axis):
+            """Pytree spec for a (possibly quantized-dict) expert weight:
+            experts on model, f dim FSDP'd, per-leaf divisibility-checked
+            (stats tensors have size-1 dims).  Dequantizing *inside* the
+            region guarantees the codes arrive as local slices (GSPMD drops
+            the f-sharding through the int4-unpack reshape otherwise and
+            replicates the dequantized tensor — measured, Perf log it2)."""
+            def one(leaf):
+                dims = [None, None, None]
+                if leaf.shape[0] % tp_n == 0:
+                    dims[0] = "model"
+                if leaf.shape[f_axis] % fa_n == 0:
+                    dims[f_axis] = f_in
+                return P(*dims)
+            if is_qweight(w):
+                return {k: one(v) for k, v in w.items()}
+            return one(w)
+
+        def region(hb, rw, g, u, dn):
+            B_, S_, d_ = hb.shape
+            idx = jax.lax.axis_index("model")
+            cd = hb.dtype
+            y = moe_lib.moe_ffn_local(
+                hb.reshape(B_ * S_, d_), rw,
+                materialize(g, cd), materialize(u, cd), materialize(dn, cd),
+                mcfg, shard_idx=idx)
+            return jax.lax.psum(y.reshape(B_, S_, d_), ("model",) + fa)
+
+        return _shard_map_compat(
+            region, mesh,
+            in_specs=(P(bspec, None, None), P(None, None),
+                      wspec(eg, 2), wspec(eu, 2), wspec(ed, 1)),
+            out_specs=P(bspec, None, None),
+        )(h, router_w, eg, eu, ed)
+
+    dpn = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+    bspec = dp if (dp and B % dpn == 0) else None
+
+    def region(hb, rw, g, u, dn):
+        if fa:
+            g = jax.lax.all_gather(g, fa, axis=1, tiled=True)
+            u = jax.lax.all_gather(u, fa, axis=1, tiled=True)
+            dn = jax.lax.all_gather(dn, fa, axis=2, tiled=True)
+        return moe_lib.moe_ffn(hb, rw, g, u, dn, mcfg, axis_name="model")
+
+    return _shard_map_compat(
+        region, mesh,
+        in_specs=(P(bspec, None, None), P(None, None),
+                  P("model", f_in, None), P("model", f_in, None),
+                  P("model", None, f_in)),
+        out_specs=P(bspec, None, None),
+    )(h, router_w, eg, eu, ed)
+
+
+def _shard_map_compat(f, mesh, in_specs, out_specs):
+    """jax>=0.8 renamed check_rep -> check_vma; support both."""
+    try:
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    except TypeError:
+        from jax.experimental.shard_map import shard_map as _sm
+        return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                   check_rep=False)
+
+
+def _ffn_block(x, lp, cfg: ArchConfig, opts: ModelOpts):
+    h = _norm(x, lp["mlp_norm"], cfg)
+    if cfg.is_moe:
+        mcfg = moe_lib.MoEConfig(cfg.n_experts, cfg.top_k,
+                                 cfg.capacity_factor)
+        router_w = materialize(lp["router"], jnp.float32)
+        if opts.moe_axis and opts.mesh is not None:
+            if opts.moe_mode == "reduce":
+                # pass raw (possibly quantized) weights; dequant in-region
+                o = _moe_ep_sharded(h, router_w, lp["eg"], lp["eu"],
+                                    lp["ed"], mcfg, opts)
+            else:
+                o = _moe_ep_sharded(h, router_w,
+                                    materialize(lp["eg"], h.dtype),
+                                    materialize(lp["eu"], h.dtype),
+                                    materialize(lp["ed"], h.dtype),
+                                    mcfg, opts)
+        else:
+            o = moe_lib.moe_ffn(h, router_w, materialize(lp["eg"], h.dtype),
+                                materialize(lp["eu"], h.dtype),
+                                materialize(lp["ed"], h.dtype), mcfg,
+                                axis_name=None, act_fn=jax.nn.silu)
+    else:
+        act = cfg.mlp_act
+        g = shard_act(mm(h, lp["w_gate"]), opts, "dp", None, "tp")
+        u = shard_act(mm(h, lp["w_up"]), opts, "dp", None, "tp")
+        g = jax.nn.silu(g) if act == "silu" else jax.nn.gelu(g, approximate=True)
+        o = mm(g * u, lp["w_down"])
+    o = shard_act(o, opts, "dp", None, None)
+    if cfg.post_norms:
+        o = _norm(o, lp["post_mlp_norm"], cfg)
+    return o
+
+
+def _maybe_quant_act(x, opts: ModelOpts):
+    if opts.a_bits < 32:
+        from repro.core.activations import fake_quant_act
+        return fake_quant_act(x, opts.a_bits)
+    return x
+
+
+def decoder_layer(x, lp, cfg: ArchConfig, opts: ModelOpts, positions,
+                  window):
+    a, _ = _attn_block(x, lp, cfg, opts, positions, window)
+    x = x + a
+    x = x + _ffn_block(x, lp, cfg, opts)
+    return _maybe_quant_act(x, opts)
+
+
+# --------------------------------------------------------------------------
+# Embedding / head / loss
+# --------------------------------------------------------------------------
+
+def _embed_tokens(params, cfg: ArchConfig, opts: ModelOpts, tokens):
+    emb = materialize(params["embed"], opts.compute_dtype)
+    x = jnp.take(emb, tokens, axis=0)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return shard_act(x, opts, "dp", None, None)
+
+
+def _head_weight(params, cfg: ArchConfig):
+    if cfg.tie_embeddings:
+        emb = params["embed"]
+        if is_qweight(emb):
+            # tied quantized embedding: dequantize then transpose
+            return materialize(emb, jnp.bfloat16).T
+        return emb.T
+    return params["lm_head"]
+
+
+def _seq_chunk(S: int, target: int) -> int:
+    """Largest divisor of S that is <= target (>=1)."""
+    c = min(target, S)
+    while S % c:
+        c -= 1
+    return c
+
+
+def chunked_ce_loss(x, head_w, targets, cfg: ArchConfig, opts: ModelOpts):
+    """Cross-entropy without materializing (B, S, V) logits.
+
+    x (B, S, d), targets (B, S) int32 with -1 = ignore.  Scans over
+    *sequence* chunks (batch stays sharded over the DP axes; logits stay
+    sharded over `model` on V): peak logits memory = B_local * chunk * V /
+    tp per device.
+    """
+    B, S, d = x.shape
+    chunk = _seq_chunk(S, opts.ce_chunk)
+    n = S // chunk
+    xc = jnp.moveaxis(x.reshape(B, n, chunk, d), 1, 0)        # (n, B, c, d)
+    tc = jnp.moveaxis(targets.reshape(B, n, chunk), 1, 0)     # (n, B, c)
+
+    def body(carry, inp):
+        xb, tb = inp
+        logits = jnp.dot(xb, materialize(head_w, xb.dtype),
+                         preferred_element_type=jnp.float32)
+        logits = shard_act(logits, opts, "dp", None, "tp")
+        logits = softcap(logits, cfg.final_logit_cap)
+        lse = jax.nn.logsumexp(logits, axis=-1)               # (B, c)
+        gold = jnp.take_along_axis(
+            logits, jnp.clip(tb, 0)[..., None], axis=-1)[..., 0]
+        valid = (tb >= 0).astype(jnp.float32)
+        loss = jnp.sum((lse - gold) * valid)
+        return (carry[0] + loss, carry[1] + jnp.sum(valid)), None
+
+    (total, count), _ = jax.lax.scan(body, (jnp.float32(0), jnp.float32(0)),
+                                     (xc, tc))
+    return total / jnp.maximum(count, 1.0)
+
+
+# --------------------------------------------------------------------------
+# Forward passes
+# --------------------------------------------------------------------------
+
+_QUANT_KEYS = ("wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down",
+               "eg", "eu", "ed")
+
+
+def _uniq_layer(lp, uniq_scan, layer_idx):
+    """Apply the UNIQ transform to one layer's weights inside the scan.
+
+    Per-layer transient + rematerialized in the backward pass — the
+    whole-tree transform materializes a second copy of every parameter
+    (catastrophic at 1T params); this keeps one layer live.  Per-tensor
+    statistics match the stacked-tree semantics exactly (reduce over all
+    non-leading axes).
+    """
+    if uniq_scan is None:
+        return lp
+    from repro.core.uniq import transform_param, _fold_path
+    ucfg, modes, rng = uniq_scan
+    mode = modes[layer_idx] if jnp.ndim(modes) else modes
+    out = dict(lp)
+    for key in _QUANT_KEYS:
+        if key in lp and not is_qweight(lp[key]):
+            krng = jax.random.fold_in(_fold_path(rng, key), layer_idx)
+            out[key] = transform_param(lp[key], krng, mode, ucfg,
+                                       stacked=False)
+    return out
+
+
+def _scan_layers(params, cfg: ArchConfig, opts: ModelOpts, x, positions,
+                 collect_kv: bool = False, uniq_scan=None):
+    windows = _window_schedule(cfg)
+    layer_ids = jnp.arange(cfg.n_layers, dtype=jnp.int32)
+
+    def body(h, inp):
+        lp, window, idx = inp
+        lp = _uniq_layer(lp, uniq_scan, idx)
+        if collect_kv:
+            a, kv = _attn_block(h, lp, cfg, opts, positions, window,
+                                kv_out=True)
+            h = h + a
+            h = h + _ffn_block(h, lp, cfg, opts)
+            return _maybe_quant_act(h, opts), kv
+        return decoder_layer(h, lp, cfg, opts, positions, window), None
+
+    f = body
+    if opts.remat:
+        f = jax.checkpoint(body, prevent_cse=False)
+    return jax.lax.scan(f, x, (params["layers"], windows, layer_ids))
+
+
+def forward_train(params, cfg: ArchConfig, opts: ModelOpts, batch,
+                  uniq_scan=None):
+    """Teacher-forced LM loss.  batch: tokens/targets (+patch_embeds).
+
+    ``uniq_scan = (UniqConfig, (L,) modes, rng)`` applies the UNIQ weight
+    transform per layer inside the scan (see _uniq_layer)."""
+    tokens = batch["tokens"]
+    x = _embed_tokens(params, cfg, opts, tokens)
+    n_patches = 0
+    if cfg.family == "vlm":
+        pe = batch["patch_embeds"].astype(opts.compute_dtype)
+        x = jnp.concatenate([pe, x], axis=1)
+        n_patches = pe.shape[1]
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    x, _ = _scan_layers(params, cfg, opts, x, positions,
+                        uniq_scan=uniq_scan)
+    x = _norm_final(x, params, cfg)
+    if n_patches:
+        x = x[:, n_patches:]
+    return chunked_ce_loss(x, _head_weight(params, cfg), batch["targets"],
+                           cfg, opts)
+
+
+def _norm_final(x, params, cfg: ArchConfig):
+    fn = params["final_norm"]
+    if cfg.norm_kind == "layer":
+        return layer_norm(x, fn["scale"], fn["bias"], cfg.norm_eps)
+    return rms_norm(x, fn, cfg.norm_eps, zero_centered=cfg.post_norms)
+
+
+def forward_prefill(params, cfg: ArchConfig, opts: ModelOpts, batch,
+                    pad_to: Optional[int] = None):
+    """Prefill: run the prompt, emit last-position logits + per-layer KV.
+
+    Returns (logits (B, V), cache dict with k/v (L, B, S, KV, hd)).
+    """
+    tokens = batch["tokens"]
+    x = _embed_tokens(params, cfg, opts, tokens)
+    if cfg.family == "vlm":
+        pe = batch["patch_embeds"].astype(opts.compute_dtype)
+        x = jnp.concatenate([pe, x], axis=1)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    x, kvs = _scan_layers(params, cfg, opts, x, positions, collect_kv=True)
+    x = _norm_final(x, params, cfg)
+    last = x[:, -1]
+    logits = jnp.dot(last, materialize(_head_weight(params, cfg), last.dtype),
+                     preferred_element_type=jnp.float32)
+    logits = softcap(logits, cfg.final_logit_cap)
+    k, v = kvs
+    if pad_to and pad_to > S:
+        pad = [(0, 0), (0, 0), (0, pad_to - S), (0, 0), (0, 0)]
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+    return logits, {"k": k, "v": v}
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16):
+    """Zeroed KV cache (L, B, S, KV, hd) for decoder-only families."""
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def cache_specs(cfg: ArchConfig, batch: int, max_len: int,
+                dtype=jnp.bfloat16):
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jax.ShapeDtypeStruct(shape, dtype),
+            "v": jax.ShapeDtypeStruct(shape, dtype)}
+
+
+def decode_step(params, cfg: ArchConfig, opts: ModelOpts, cache, tokens,
+                positions):
+    """One decode step.  tokens (B, 1); positions (B,) current index.
+
+    Returns (logits (B, V), updated cache).
+    """
+    B = tokens.shape[0]
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    x = _embed_tokens(params, cfg, opts, tokens)          # (B, 1, d)
+    pos2d = positions[:, None]
+    windows = _window_schedule(cfg)
+    barange = jnp.arange(B)
+
+    def body(h, inp):
+        lp, window, k_cache, v_cache = inp
+        hn = _norm(h, lp["attn_norm"], cfg)
+        q = mm(hn, lp["wq"]).reshape(B, 1, H, hd)
+        k = mm(hn, lp["wk"]).reshape(B, 1, KV, hd)
+        v = mm(hn, lp["wv"]).reshape(B, 1, KV, hd)
+        q = apply_rope(q, pos2d, cfg.rope_theta)
+        k = apply_rope(k, pos2d, cfg.rope_theta)
+        k_cache = k_cache.at[barange, positions].set(k[:, 0].astype(k_cache.dtype))
+        v_cache = v_cache.at[barange, positions].set(v[:, 0].astype(v_cache.dtype))
+        p = attn.AttnParams(window=window, logit_cap=cfg.attn_logit_cap,
+                            causal=True)
+        o = attn.decode_attention(q, k_cache, v_cache, positions, p)
+        o = mm(o.reshape(B, 1, H * hd), lp["wo"])
+        if cfg.post_norms:
+            o = _norm(o, lp["post_attn_norm"], cfg)
+        h = h + o
+        h = h + _ffn_block(h, lp, cfg, opts)
+        return _maybe_quant_act(h, opts), (k_cache, v_cache)
+
+    x, (k_new, v_new) = jax.lax.scan(
+        body, x, (params["layers"], windows, cache["k"], cache["v"]))
+    x = _norm_final(x, params, cfg)
+    logits = jnp.dot(x[:, 0], materialize(_head_weight(params, cfg), x.dtype),
+                     preferred_element_type=jnp.float32)
+    logits = softcap(logits, cfg.final_logit_cap)
+    return logits, {"k": k_new, "v": v_new}

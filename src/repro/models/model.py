@@ -1,0 +1,98 @@
+"""Unified model API dispatching over architecture families.
+
+    init(rng, cfg)                      -> params
+    loss_fn(params, cfg, opts, batch)   -> scalar loss          (train)
+    prefill(params, cfg, opts, batch)   -> (logits, cache)      (serve)
+    decode(params, cfg, opts, cache, tokens, positions)
+                                        -> (logits, cache)      (serve)
+    cache_specs(cfg, shape)             -> ShapeDtypeStruct pytree
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import encdec, hybrid, lm
+from repro.models.lm import ModelOpts
+
+__all__ = ["ModelOpts", "init", "loss_fn", "prefill", "decode",
+           "cache_specs", "init_cache", "quantize_for_serving"]
+
+
+def init(rng: jax.Array, cfg: ArchConfig) -> Any:
+    if cfg.family == "audio":
+        return encdec.init_params_encdec(rng, cfg)
+    if cfg.family == "ssm":
+        return hybrid.init_params_mamba(rng, cfg)
+    if cfg.family == "hybrid":
+        return hybrid.init_params_zamba(rng, cfg)
+    return lm.init_params(rng, cfg)
+
+
+def loss_fn(params, cfg: ArchConfig, opts: ModelOpts, batch,
+            uniq_scan=None) -> jax.Array:
+    """``uniq_scan=(UniqConfig, (L,) modes, rng)`` applies the UNIQ weight
+    transform per layer inside the scan (decoder-only families)."""
+    if cfg.family == "audio":
+        return encdec.forward_train_encdec(params, cfg, opts, batch)
+    if cfg.family == "ssm":
+        return hybrid.forward_train_mamba(params, cfg, opts, batch)
+    if cfg.family == "hybrid":
+        return hybrid.forward_train_zamba(params, cfg, opts, batch)
+    return lm.forward_train(params, cfg, opts, batch, uniq_scan=uniq_scan)
+
+
+def prefill(params, cfg: ArchConfig, opts: ModelOpts, batch):
+    if cfg.family == "audio":
+        return encdec.forward_prefill_encdec(params, cfg, opts, batch)
+    if cfg.family == "ssm":
+        return hybrid.prefill_mamba(params, cfg, opts, batch)
+    if cfg.family == "hybrid":
+        return hybrid.prefill_zamba(params, cfg, opts, batch)
+    return lm.forward_prefill(params, cfg, opts, batch)
+
+
+def decode(params, cfg: ArchConfig, opts: ModelOpts, cache, tokens,
+           positions):
+    if cfg.family == "audio":
+        return encdec.decode_step_encdec(params, cfg, opts, cache, tokens,
+                                         positions)
+    if cfg.family == "ssm":
+        return hybrid.decode_step_mamba(params, cfg, opts, cache, tokens,
+                                        positions)
+    if cfg.family == "hybrid":
+        return hybrid.decode_step_zamba(params, cfg, opts, cache, tokens,
+                                        positions)
+    return lm.decode_step(params, cfg, opts, cache, tokens, positions)
+
+
+def cache_specs(cfg: ArchConfig, shape: ShapeConfig, dtype=jnp.bfloat16):
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.family == "audio":
+        return encdec.cache_specs_encdec(cfg, B, S // 2, S // 2, dtype)
+    if cfg.family == "ssm":
+        return hybrid.cache_specs_mamba(cfg, B, dtype)
+    if cfg.family == "hybrid":
+        return hybrid.cache_specs_zamba(cfg, B, S, dtype)
+    return lm.cache_specs(cfg, B, S, dtype)
+
+
+def init_cache(cfg: ArchConfig, shape: ShapeConfig, dtype=jnp.bfloat16):
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.family == "audio":
+        return encdec.init_cache_encdec(cfg, B, S // 2, S // 2, dtype)
+    if cfg.family == "ssm":
+        return hybrid.init_cache_mamba(cfg, B, dtype)
+    if cfg.family == "hybrid":
+        return hybrid.init_cache_zamba(cfg, B, S, dtype)
+    return lm.init_cache(cfg, B, S, dtype)
+
+
+def quantize_for_serving(params, bits: int, per_channel: bool = True):
+    """k-quantile-code all matmul weights for the serving path (UNIQ)."""
+    return lm.quantize_params_for_serving(params, bits,
+                                          per_channel=per_channel)

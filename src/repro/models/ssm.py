@@ -1,0 +1,208 @@
+"""Mamba-2 SSD (state-space duality) blocks — chunked train/prefill scan and
+O(1)-state decode step.
+
+Per layer (n_groups = 1, following the Mamba-2 reference dims):
+
+    in_proj : d -> [z (d_in), x (d_in), B (n), C (n), dt (nh)]
+    conv1d  : causal depthwise width-4 over [x, B, C] channels, SiLU
+    SSD     : h_t = exp(dt_t A)_h * h_{t-1} + dt_t * B_t x_t^T
+              y_t = C_t . h_t + D_h x_t
+    gate    : y = RMSNorm(y * silu(z))
+    out_proj: d_in -> d
+
+with d_in = expand * d, heads nh = d_in / headdim.
+
+The chunked scan (lax.scan over S/Q chunks) computes the intra-chunk part
+as a masked (Q, Q) matmul and carries the (nh, hd, n) state across chunks —
+the SSD block-decomposition of the paper [arXiv:2405.21060], which maps the
+recurrence onto MXU matmuls instead of a length-S scalar scan.  Long-context
+decode (long_500k) uses ``ssd_decode_step``: state is O(1) in S.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import rms_norm
+
+Array = jax.Array
+
+
+class SSMDims(NamedTuple):
+    d_model: int
+    d_inner: int     # expand * d_model
+    n_heads: int     # d_inner // headdim
+    headdim: int
+    state: int       # n
+    d_conv: int = 4
+
+    @property
+    def conv_channels(self) -> int:
+        return self.d_inner + 2 * self.state
+
+    @property
+    def in_proj_out(self) -> int:
+        # z, x, B, C, dt
+        return 2 * self.d_inner + 2 * self.state + self.n_heads
+
+
+def _split_in_proj(proj: Array, dims: SSMDims):
+    z, xbc, dt = jnp.split(
+        proj, [dims.d_inner, dims.d_inner + dims.conv_channels], axis=-1)
+    return z, xbc, dt
+
+
+def causal_conv1d(xbc: Array, conv_w: Array, conv_b: Array) -> Array:
+    """(B, S, C) depthwise causal conv, width d_conv;  conv_w (C, d_conv)."""
+    B, S, C = xbc.shape
+    d_conv = conv_w.shape[-1]
+    x = jnp.pad(xbc, ((0, 0), (d_conv - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        conv_w.astype(jnp.float32).T[:, None, :],      # (d_conv, 1, C)
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=C)
+    return (out + conv_b.astype(jnp.float32)).astype(xbc.dtype)
+
+
+def ssd_scan(x: Array, dt: Array, A_log: Array, Bm: Array, Cm: Array,
+             D: Array, chunk: int = 128):
+    """Chunked SSD.
+
+    x  : (B, S, nh, hd)   inputs per head
+    dt : (B, S, nh)       softplus'd step sizes
+    A_log : (nh,)         A = -exp(A_log)
+    Bm, Cm : (B, S, n)    input/output projections (shared across heads)
+    D  : (nh,)            skip
+    returns y (B, S, nh, hd), final state (B, nh, hd, n)
+    """
+    Bsz, S, nh, hd = x.shape
+    n = Bm.shape[-1]
+    if S % chunk:
+        chunk = S
+    nc = S // chunk
+
+    A = -jnp.exp(A_log.astype(jnp.float32))              # (nh,) negative
+    dtf = dt.astype(jnp.float32)
+    la = dtf * A                                         # (B, S, nh) log-decay
+    xc = x.reshape(Bsz, nc, chunk, nh, hd)
+    dtc = dtf.reshape(Bsz, nc, chunk, nh)
+    lac = la.reshape(Bsz, nc, chunk, nh)
+    Bc = Bm.reshape(Bsz, nc, chunk, n).astype(jnp.float32)
+    Cc = Cm.reshape(Bsz, nc, chunk, n).astype(jnp.float32)
+
+    mask = jnp.tril(jnp.ones((chunk, chunk), jnp.bool_))
+
+    def body(h, inp):
+        xb, dtb, lab, Bb, Cb = inp                       # one chunk
+        # cumulative log-decay within chunk (inclusive)
+        cs = jnp.cumsum(lab, axis=1)                     # (B, Q, nh)
+        # intra-chunk: scores[i,j] = (C_i.B_j) exp(cs_i - cs_j) dt_j, j<=i
+        cb = jnp.einsum("bin,bjn->bij", Cb, Bb)          # (B, Q, Q)
+        dec = jnp.exp(cs[:, :, None] - cs[:, None, :])   # (B, Q, Q, nh)
+        sc = cb[..., None] * dec * dtb[:, None]          # (B, Q, Q, nh)
+        sc = jnp.where(mask[None, :, :, None], sc, 0.0)
+        y_intra = jnp.einsum("bijh,bjhd->bihd", sc,
+                             xb.astype(jnp.float32))
+        # inter-chunk: y_i += C_i . h_prev * exp(cs_i)
+        y_inter = jnp.einsum("bin,bhdn,bih->bihd", Cb, h, jnp.exp(cs))
+        # state update: h = exp(cs_Q) h + sum_j exp(cs_Q - cs_j) dt_j B_j x_j^T
+        tot = cs[:, -1]                                  # (B, nh)
+        w = jnp.exp(tot[:, None] - cs) * dtb             # (B, Q, nh)
+        dh = jnp.einsum("bjh,bjn,bjhd->bhdn", w, Bb, xb.astype(jnp.float32))
+        h = jnp.exp(tot)[..., None, None] * h + dh
+        return h, (y_intra + y_inter).astype(x.dtype)
+
+    h0 = jnp.zeros((Bsz, nh, hd, n), jnp.float32)
+    hT, yc = jax.lax.scan(
+        body, h0,
+        (jnp.moveaxis(xc, 1, 0), jnp.moveaxis(dtc, 1, 0),
+         jnp.moveaxis(lac, 1, 0), jnp.moveaxis(Bc, 1, 0),
+         jnp.moveaxis(Cc, 1, 0)))
+    y = jnp.moveaxis(yc, 0, 1).reshape(Bsz, S, nh, hd)
+    y = y + x * D.astype(x.dtype)[None, None, :, None]
+    return y, hT
+
+
+def ssd_decode_step(x: Array, dt: Array, A_log: Array, Bm: Array, Cm: Array,
+                    D: Array, h: Array):
+    """One-token SSD update.
+
+    x (B, nh, hd), dt (B, nh), Bm/Cm (B, n), h (B, nh, hd, n).
+    returns y (B, nh, hd), new h.
+    """
+    A = -jnp.exp(A_log.astype(jnp.float32))
+    dtf = dt.astype(jnp.float32)
+    a = jnp.exp(dtf * A)                                 # (B, nh)
+    xf = x.astype(jnp.float32)
+    dh = jnp.einsum("bh,bn,bhd->bhdn", dtf, Bm.astype(jnp.float32), xf)
+    h = a[..., None, None] * h + dh
+    y = jnp.einsum("bn,bhdn->bhd", Cm.astype(jnp.float32), h)
+    y = y + xf * D.astype(jnp.float32)[None, :, None]
+    return y.astype(x.dtype), h
+
+
+def mamba2_block(x: Array, p: dict, dims: SSMDims, chunk: int = 128,
+                 shard_fn=None, state_out: bool = False):
+    """Full Mamba-2 block on (B, S, d).  p holds this layer's parameters.
+
+    ``shard_fn(x, *axes)``: optional activation-sharding hook ('dp'/'tp'
+    sentinels) so d_inner stays tensor-parallel under pjit.
+    ``state_out``: also return (conv_cache, ssm_state) for decode prefill.
+    """
+    sf = shard_fn or (lambda a, *_: a)
+    B, S, d = x.shape
+    cd = x.dtype
+    proj = sf(jnp.dot(x, p["in_proj"].astype(cd)), "dp", None, "tp")
+    z, xbc_raw, dt = _split_in_proj(proj, dims)
+    xbc = causal_conv1d(xbc_raw, p["conv_w"], p["conv_b"])
+    xbc = jax.nn.silu(xbc)
+    xs, Bm, Cm = jnp.split(
+        xbc, [dims.d_inner, dims.d_inner + dims.state], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    xh = sf(xs.reshape(B, S, dims.n_heads, dims.headdim),
+            "dp", None, "tp", None)
+    y, hT = ssd_scan(xh, dt, p["A_log"], Bm, Cm, p["D"], chunk=chunk)
+    y = y.reshape(B, S, dims.d_inner)
+    y = sf(rms_norm(y * jax.nn.silu(z), p["norm_scale"]), "dp", None, "tp")
+    out = sf(jnp.dot(y, p["out_proj"].astype(cd)), "dp", None, None)
+    if state_out:
+        conv_cache = xbc_raw[:, S - (dims.d_conv - 1):]  # pre-conv window
+        return out, conv_cache, hT
+    return out
+
+
+def mamba2_decode(x: Array, p: dict, dims: SSMDims, conv_cache: Array,
+                  ssm_state: Array):
+    """One-token Mamba-2 step.
+
+    x (B, 1, d); conv_cache (B, d_conv-1, conv_channels);
+    ssm_state (B, nh, hd, n).  Returns (y (B, 1, d), new caches).
+    """
+    B = x.shape[0]
+    cd = x.dtype
+    proj = jnp.dot(x[:, 0], p["in_proj"].astype(cd))     # (B, proj)
+    z, xbc, dt = _split_in_proj(proj, dims)
+    # rolling conv: window = [cache, current]
+    win = jnp.concatenate([conv_cache, xbc[:, None]], axis=1)  # (B, d_conv, C)
+    conv_out = jnp.einsum("bwc,cw->bc", win.astype(jnp.float32),
+                          p["conv_w"].astype(jnp.float32))
+    conv_out = conv_out + p["conv_b"].astype(jnp.float32)
+    xbc = jax.nn.silu(conv_out).astype(cd)
+    new_conv_cache = win[:, 1:]
+    xs, Bm, Cm = jnp.split(
+        xbc, [dims.d_inner, dims.d_inner + dims.state], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    xh = xs.reshape(B, dims.n_heads, dims.headdim)
+    y, ssm_state = ssd_decode_step(xh, dt, p["A_log"], Bm, Cm, p["D"],
+                                   ssm_state)
+    y = y.reshape(B, dims.d_inner)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_scale"])
+    out = jnp.dot(y, p["out_proj"].astype(cd))
+    return out[:, None], new_conv_cache, ssm_state

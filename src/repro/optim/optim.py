@@ -1,0 +1,181 @@
+"""Optimizers: SGD(+momentum) and AdamW, with per-layer freeze masks
+(UNIQ gradual schedule), gradient clipping, LR schedules, and optional
+int8-quantized momentum (beyond-paper; lets the 1T-param cell fit —
+DESIGN.md Sec. 8).
+
+The paper fine-tunes with SGD, lr 1e-4, momentum 0.9, weight decay 1e-4,
+reducing the LR as noise is injected ("to compensate for noisier
+gradients") — ``cosine_schedule`` / ``stage_scaled_lr`` implement that.
+
+All state lives in a plain pytree so checkpointing / resharding is
+uniform.  Freeze masks are traced (0/1) values: switching gradual stages
+never recompiles.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimConfig:
+    kind: str = "sgd"                 # sgd | adamw
+    lr: float = 1e-4                  # paper Sec. 4 fine-tune default
+    momentum: float = 0.9
+    weight_decay: float = 1e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    grad_clip: float = 1.0            # 0 = off
+    momentum_dtype: str = "float32"   # float32 | bfloat16 | int8
+
+
+# --------------------------------------------------------------------------
+# int8 momentum codec (absmax per tensor, error-feedback-free: the
+# quantization error is re-absorbed next step since momentum is a running
+# average; validated against fp32 momentum in tests)
+# --------------------------------------------------------------------------
+
+def _encode_m(m: Array, dtype: str):
+    if dtype == "float32":
+        return m.astype(jnp.float32), None
+    if dtype == "bfloat16":
+        return m.astype(jnp.bfloat16), None
+    # per-leading-slice absmax scale (per layer for scan-stacked params)
+    axes = tuple(range(1, m.ndim)) if m.ndim >= 2 else None
+    amax = jnp.max(jnp.abs(m), axis=axes, keepdims=m.ndim >= 2)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    codes = jnp.clip(jnp.round(m / scale), -127, 127).astype(jnp.int8)
+    return codes, scale.astype(jnp.float32)
+
+
+def _decode_m(codes: Array, scale, dtype: str) -> Array:
+    if dtype in ("float32", "bfloat16"):
+        return codes.astype(jnp.float32)
+    return codes.astype(jnp.float32) * scale
+
+
+def init_state(params: Any, cfg: OptimConfig) -> Any:
+    def zero_m(p):
+        codes, scale = _encode_m(jnp.zeros(p.shape, jnp.float32),
+                                 cfg.momentum_dtype)
+        return {"m": codes} if scale is None else {"m": codes, "ms": scale}
+    if cfg.kind == "sgd":
+        return {"mu": jax.tree.map(zero_m, params),
+                "count": jnp.zeros((), jnp.int32)}
+    if cfg.kind == "adamw":
+        return {"mu": jax.tree.map(zero_m, params),
+                "nu": jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params),
+                "count": jnp.zeros((), jnp.int32)}
+    raise ValueError(cfg.kind)
+
+
+def global_norm(tree: Any) -> Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads: Any, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), norm
+
+
+def apply_updates(params: Any, grads: Any, state: Any, cfg: OptimConfig,
+                  lr: Array, freeze_mask: Optional[Any] = None):
+    """One optimizer step.  ``freeze_mask``: pytree (or None) of 0/1 arrays
+    broadcastable against each parameter — 0 freezes (UNIQ FROZEN blocks).
+
+    Returns (new_params, new_state, metrics).
+    """
+    if cfg.grad_clip > 0:
+        grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    else:
+        gnorm = global_norm(grads)
+    count = state["count"] + 1
+
+    def mask_of(path_mask, p):
+        if path_mask is None:
+            return 1.0
+        m = jnp.asarray(path_mask)
+        return m.reshape(m.shape + (1,) * (p.ndim - m.ndim)).astype(jnp.float32)
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_flatten(grads)[0]
+    flat_mu = jax.tree_util.tree_flatten(
+        state["mu"], is_leaf=lambda x: isinstance(x, dict) and "m" in x)[0]
+    flat_mask = (jax.tree_util.tree_flatten(freeze_mask)[0]
+                 if freeze_mask is not None else [None] * len(flat_p))
+
+    new_p, new_mu, new_nu = [], [], []
+    flat_nu = (jax.tree_util.tree_flatten(state["nu"])[0]
+               if cfg.kind == "adamw" else [None] * len(flat_p))
+
+    for p, g, mu_d, nu, mk in zip(flat_p, flat_g, flat_mu, flat_nu,
+                                  flat_mask):
+        g32 = g.astype(jnp.float32)
+        p32 = p.astype(jnp.float32)
+        m_prev = _decode_m(mu_d["m"], mu_d.get("ms"), cfg.momentum_dtype)
+        mask = mask_of(mk, p)
+        if cfg.kind == "sgd":
+            g_wd = g32 + cfg.weight_decay * p32
+            m_new = cfg.momentum * m_prev + g_wd
+            upd = lr * m_new
+        else:
+            m_new = cfg.beta1 * m_prev + (1 - cfg.beta1) * g32
+            nu = cfg.beta2 * nu + (1 - cfg.beta2) * g32 * g32
+            mhat = m_new / (1 - cfg.beta1 ** count.astype(jnp.float32))
+            nhat = nu / (1 - cfg.beta2 ** count.astype(jnp.float32))
+            upd = lr * (mhat / (jnp.sqrt(nhat) + cfg.eps)
+                        + cfg.weight_decay * p32)
+            new_nu.append(nu)
+        p_next = p32 - upd * mask
+        # frozen params also keep their previous momentum frozen
+        m_keep = m_prev * (1.0 - mask) + m_new * mask
+        codes, scale = _encode_m(m_keep, cfg.momentum_dtype)
+        new_mu.append({"m": codes} if scale is None
+                      else {"m": codes, "ms": scale})
+        new_p.append(p_next.astype(p.dtype))
+
+    params = jax.tree_util.tree_unflatten(treedef, new_p)
+    state = {"mu": jax.tree_util.tree_unflatten(treedef, new_mu),
+             "count": count}
+    if cfg.kind == "adamw":
+        state["nu"] = jax.tree_util.tree_unflatten(treedef, new_nu)
+    return params, state, {"grad_norm": gnorm}
+
+
+# --------------------------------------------------------------------------
+# LR schedules
+# --------------------------------------------------------------------------
+
+def cosine_schedule(base_lr: float, total_steps: int,
+                    warmup: int = 0) -> Callable[[Array], Array]:
+    def lr_at(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+        t = jnp.clip((step - warmup) / max(total_steps - warmup, 1), 0.0, 1.0)
+        return base_lr * warm * 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+    return lr_at
+
+
+def constant_schedule(base_lr: float) -> Callable[[Array], Array]:
+    return lambda step: jnp.asarray(base_lr, jnp.float32)
+
+
+def stage_scaled_lr(base_lr: float, steps_per_stage: int,
+                    decay: float = 0.5) -> Callable[[Array], Array]:
+    """Paper Sec. 3.2: reduce the LR as noise is injected — decay per
+    gradual-quantization stage."""
+    def lr_at(step):
+        stage = jnp.asarray(step, jnp.float32) // max(steps_per_stage, 1)
+        return base_lr * (decay ** jnp.minimum(stage, 8.0))
+    return lr_at

@@ -1,0 +1,188 @@
+"""Sharding rules: parameter / activation / cache PartitionSpecs.
+
+Axes (DESIGN.md Sec. 5):
+  pod   — DCN data parallelism across pods (multi-pod mesh only)
+  data  — in-pod data parallelism + FSDP (params sharded over `data` on a
+          non-TP dim; GSPMD inserts the per-layer all-gather / grad
+          reduce-scatter)
+  model — tensor parallelism (attention heads / d_ff / vocab), expert
+          parallelism (MoE expert axis), and sequence sharding for caches.
+
+Rules are parameter-name based, per family; any axis that does not divide
+its mesh extent falls back to replicated (validated per leaf, so odd dims
+like vocab=49155 or head counts < tp degrade gracefully instead of
+erroring).  ``fsdp=False`` drops the `data` axis from parameters (pure DP).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+
+def dp_axes(mesh: Mesh):
+    """Data-parallel axes present in this mesh ('pod' optional)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _fit(spec: P, shape, mesh: Mesh) -> P:
+    """Drop sharding on dims that don't divide the mesh extent."""
+    out = []
+    for i, axes in enumerate(spec):
+        if axes is None or i >= len(shape):
+            out.append(None)
+            continue
+        ax = axes if isinstance(axes, tuple) else (axes,)
+        size = int(np.prod([mesh.shape[a] for a in ax]))
+        out.append(axes if shape[i] % size == 0 else None)
+    return P(*out)
+
+
+def _param_spec(path: str, shape, cfg: ArchConfig, fsdp, mesh: Mesh,
+                expert_mode: str = "gather") -> P:
+    # quantized-weight leaves inherit the parent weight's rule: q_codes has
+    # the weight's shape (last dim halved for int4 — _fit re-validates);
+    # q_mu/q_sigma are (.., 1, C) stats, non-divisible dims fall replicated.
+    parts = path.split("/")
+    if parts[-1] in ("q_codes", "q_mu", "q_sigma") and len(parts) >= 2:
+        path = "/".join(parts[:-1])
+    if fsdp is True:
+        d = "data"
+    elif fsdp == "pod" and "pod" in mesh.axis_names:
+        d = ("data", "pod")   # ZeRO-3 across DCN too (1T-param cells)
+    elif fsdp:
+        d = "data"
+    else:
+        d = None
+    stacked = path.startswith(("layers/", "enc_layers/", "dec_layers/"))
+    lead = (None,) if stacked else ()
+    name = path.split("/")[-1]
+
+    if name == "embed":
+        return P("model", d)
+    if name == "lm_head":
+        return P(d, "model")
+    if name in ("wq", "wk", "wv", "cross_wq", "cross_wk", "cross_wv"):
+        return P(*lead, d, "model")
+    if name in ("wo", "cross_wo"):
+        return P(*lead, "model", d)
+    if name in ("w_gate", "w_up"):
+        return P(*lead, d, "model")
+    if name == "w_down":
+        return P(*lead, "model", d)
+    if name in ("eg", "eu"):          # (L, E, d, f): experts on model
+        if expert_mode == "reduce":   # FSDP on f (partial-f compute)
+            return P(*lead, "model", None, d)
+        return P(*lead, "model", d, None)
+    if name == "ed":                  # (L, E, f, d)
+        if expert_mode == "reduce":
+            return P(*lead, "model", d, None)
+        return P(*lead, "model", None, d)
+    if name == "router":
+        return P(*lead, d, None)
+    if name == "in_proj":             # (L, d, proj): d_inner on model
+        return P(*lead, d, "model")
+    if name == "out_proj":            # (L, d_inner, d)
+        return P(*lead, "model", d)
+    if name in ("conv_w",):           # (L, C, w)
+        return P(*lead, "model", None)
+    if name in ("conv_b", "norm_scale"):
+        return P(*lead, "model")
+    return P()                        # norms, scalars: replicated
+
+
+def _tree_paths(tree):
+    from repro.core.uniq import path_str
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    return [(path_str(kp), leaf) for kp, leaf in flat], treedef
+
+
+def _drop_tp(spec: P) -> P:
+    """fsdp-only mode: no tensor parallelism — every 'model' placement is
+    folded into the FSDP axis group instead (ZeRO-3 over the whole mesh).
+    """
+    out = []
+    for e in spec:
+        if e == "model":
+            out.append(None)
+        elif e == "data":
+            out.append(("data", "model"))
+        elif isinstance(e, tuple) and "data" in e:
+            out.append(tuple(a for a in e) + ("model",))
+        else:
+            out.append(e)
+    return P(*out)
+
+
+def param_shardings(params_shape, cfg: ArchConfig, mesh: Mesh,
+                    fsdp=True, expert_mode: str = "gather", tp: bool = True):
+    """NamedSharding pytree for a parameter (shape) tree.
+
+    fsdp: True (shard over 'data'), "pod" (shard over data+pod — ZeRO-3
+    across DCN, for 1T-param cells), or False (pure DP replication).
+    expert_mode: "gather" FSDPs experts on d (weights gathered per layer);
+    "reduce" FSDPs on f for the partial-f output-reduce MoE.
+    tp=False: fsdp-only (ZeRO-3 over data x model, no tensor parallelism) —
+    the right layout for <=15B dense models at large batch, where TP
+    all-reduces dominate the step (EXPERIMENTS.md Perf granite iterations).
+    """
+    flat, treedef = _tree_paths(params_shape)
+    out = []
+    for p, l in flat:
+        spec = _param_spec(p, l.shape, cfg, fsdp, mesh, expert_mode)
+        if not tp:
+            spec = _drop_tp(spec)
+        out.append(NamedSharding(mesh, _fit(spec, l.shape, mesh)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# --------------------------------------------------------------------------
+# Input / cache rules
+# --------------------------------------------------------------------------
+
+def _batch_axes(mesh: Mesh, batch: int, include_model: bool = False):
+    axes = list(dp_axes(mesh))
+    if include_model and "model" in mesh.axis_names:
+        axes.append("model")
+    while axes and batch % int(np.prod([mesh.shape[a] for a in axes])):
+        axes.pop()  # drop outermost until divisible (e.g. batch 1)
+    return tuple(axes) if axes else None
+
+
+def input_shardings(specs_tree, mesh: Mesh, include_model: bool = False):
+    """Batch (leading dim) over DP axes; everything else replicated."""
+    def one(s):
+        spec = P(_batch_axes(mesh, s.shape[0], include_model),
+                 *(None,) * (len(s.shape) - 1))
+        return NamedSharding(mesh, spec)
+    return jax.tree.map(one, specs_tree)
+
+
+def cache_shardings(cfg: ArchConfig, cache_tree, mesh: Mesh):
+    """KV/SSM cache shardings: batch over DP axes, seq/state over model.
+
+      k/v (+cross)  (L, B, S, KV, hd) -> P(None, dp, 'model', None, None)
+      conv          (L, B, w, C)      -> P(None, dp, None, 'model')
+      ssm           (L, B, nh, hd, n) -> P(None, dp, 'model', None, None)
+    Any non-divisible dim falls back to replicated.
+    """
+    tp = "model" if "model" in mesh.axis_names else None
+    flat, treedef = _tree_paths(cache_tree)
+    out = []
+    for path, leaf in flat:
+        shape = leaf.shape
+        name = path.split("/")[-1]
+        bspec = _batch_axes(mesh, shape[1])
+        rest = [None] * (len(shape) - 2)
+        if tp is not None and rest:
+            cand = 0 if name in ("k", "v", "cross_k", "cross_v", "ssm") \
+                else len(rest) - 1
+            rest[cand] = tp
+        spec = _fit(P(None, bspec, *rest), shape, mesh)
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,163 @@
+"""Training step: UNIQ noise-injection QAT wired into the LM/CNN forward.
+
+``make_train_step`` closes over static config and returns a pure function
+
+    train_step(state, batch, step, rng) -> (state, metrics)
+
+where ``state = {"params", "opt", "step"}``.  The gradual schedule enters
+as *traced* per-layer modes (computed from ``step`` inside the graph), so
+stage transitions never recompile; FROZEN layers are hard-quantized with
+stop-gradient in the forward AND masked in the optimizer.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.uniq import (FROZEN, GradualSchedule, UniqConfig,
+                             lm_mode_fn, path_str, transform_tree,
+                             default_quant_filter)
+from repro.models import model
+from repro.models.lm import ModelOpts
+from repro.optim import optim as optim_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    uniq: UniqConfig = UniqConfig()
+    optim: optim_lib.OptimConfig = optim_lib.OptimConfig()
+    total_steps: int = 1000
+    n_blocks: int = 0            # 0 -> one block per layer (paper App. B)
+    lr_schedule: str = "stage"   # stage | cosine | constant
+    dp_compress_bits: int = 0    # >0: int8-compress cross-pod grad sync
+                                 # (UNIQ-style absmax codec over DCN)
+    uniq_in_scan: bool = False   # apply the UNIQ transform per layer inside
+                                 # the scan (decoder-only; halves the
+                                 # transform's peak memory at 1T params)
+
+
+def make_schedule(cfg: ArchConfig, tc: TrainConfig) -> GradualSchedule:
+    n_blocks = tc.n_blocks or cfg.n_layers
+    return GradualSchedule(n_layers=cfg.n_layers, n_blocks=n_blocks,
+                           total_steps=tc.total_steps,
+                           iterations=tc.uniq.stage_iterations)
+
+
+def make_lr_fn(tc: TrainConfig, schedule: GradualSchedule):
+    if tc.lr_schedule == "cosine":
+        return optim_lib.cosine_schedule(tc.optim.lr, tc.total_steps,
+                                         warmup=tc.total_steps // 50)
+    if tc.lr_schedule == "stage":
+        return optim_lib.stage_scaled_lr(tc.optim.lr,
+                                         schedule.steps_per_stage,
+                                         decay=0.8)
+    return optim_lib.constant_schedule(tc.optim.lr)
+
+
+def freeze_mask_tree(params: Any, layer_modes, quant_filter=None):
+    """Per-leaf 0/1 trainability mask from per-layer modes.
+
+    Quantized+frozen leaves get mask 0; unquantized leaves (norms, biases)
+    stay trainable throughout, as in the paper's fine-tuning protocol.
+    """
+    quant_filter = quant_filter or default_quant_filter
+    mode_for = lm_mode_fn(layer_modes)
+
+    def one(kp, leaf):
+        p = path_str(kp)
+        if not quant_filter(p, leaf):
+            return jnp.ones((), jnp.float32)
+        m = jnp.asarray(mode_for(p))
+        return (m != FROZEN).astype(jnp.float32)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    return jax.tree_util.tree_unflatten(
+        treedef, [one(kp, leaf) for kp, leaf in flat])
+
+
+def make_train_step(cfg: ArchConfig, opts: ModelOpts, tc: TrainConfig,
+                    loss_fn: Optional[Callable] = None):
+    """Returns (train_step, schedule).  ``loss_fn(params, batch)`` override
+    supports the CNN repro path; default is the LM ``model.loss_fn``."""
+    schedule = make_schedule(cfg, tc)
+    lr_fn = make_lr_fn(tc, schedule)
+    inner_opts = opts
+    if tc.dp_compress_bits and opts.mesh is not None \
+            and "pod" in opts.mesh.axis_names:
+        inner_opts = dataclasses.replace(opts, manual_axes=("pod",))
+        if cfg.is_moe:
+            raise NotImplementedError(
+                "dp_compress + shard_map EP would nest manual regions; "
+                "use GSPMD sync for MoE cells")
+    base_loss = loss_fn or (lambda p, b: model.loss_fn(p, cfg, inner_opts, b))
+
+    in_scan = (tc.uniq_in_scan and tc.uniq.enabled and tc.uniq.w_bits < 32
+               and cfg.family in ("dense", "moe", "vlm"))
+
+    def loss_and_grads(params, batch, rng_modes):
+        rng, modes = rng_modes
+
+        def loss(params):
+            if not (tc.uniq.enabled and tc.uniq.w_bits < 32):
+                return base_loss(params, batch)
+            if in_scan:
+                # layers transform inside the scan; embed/head at tree level
+                from repro.core.uniq import default_quant_filter
+                p_eff = transform_tree(
+                    params, rng, lm_mode_fn(modes), tc.uniq,
+                    quant_filter=lambda p, l: (default_quant_filter(p, l)
+                                               and not p.startswith("layers")))
+                from repro.models import model as model_lib
+                return model_lib.loss_fn(p_eff, cfg, inner_opts, batch,
+                                         uniq_scan=(tc.uniq, modes, rng))
+            p_eff = transform_tree(params, rng, lm_mode_fn(modes), tc.uniq)
+            return base_loss(p_eff, batch)
+
+        return jax.value_and_grad(loss)(params)
+
+    if tc.dp_compress_bits and opts.mesh is not None \
+            and "pod" in opts.mesh.axis_names:
+        from repro.parallel.collectives import make_pod_compressed_grads
+        loss_and_grads = make_pod_compressed_grads(
+            loss_and_grads, opts.mesh, bits=tc.dp_compress_bits)
+
+    def train_step(state, batch, rng):
+        step = state["step"]
+        modes = schedule.modes_at(step)
+        loss_val, grads = loss_and_grads(state["params"], batch,
+                                         (rng, modes))
+        mask = (freeze_mask_tree(state["params"], modes)
+                if tc.uniq.enabled and tc.uniq.w_bits < 32 else None)
+        params, opt_state, om = optim_lib.apply_updates(
+            state["params"], grads, state["opt"], tc.optim, lr_fn(step),
+            freeze_mask=mask)
+        new_state = {"params": params, "opt": opt_state, "step": step + 1}
+        metrics = {"loss": loss_val, "lr": lr_fn(step), **om}
+        return new_state, metrics
+
+    return train_step, schedule
+
+
+def init_state(rng: jax.Array, cfg: ArchConfig, tc: TrainConfig,
+               init_fn: Optional[Callable] = None):
+    params = (init_fn or (lambda r: model.init(r, cfg)))(rng)
+    return {"params": params,
+            "opt": optim_lib.init_state(params, tc.optim),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def eval_step(cfg: ArchConfig, opts: ModelOpts):
+    """Deterministic-quantized eval (the inference-time model): weights
+    hard-quantized with the k-quantile quantizer, per the paper."""
+    def step(params, batch, w_bits: int):
+        if w_bits < 32:
+            ucfg = UniqConfig(w_bits=w_bits)
+            params = transform_tree(params, jax.random.PRNGKey(0),
+                                    jnp.int32(FROZEN), ucfg)
+        return model.loss_fn(params, cfg, opts, batch)
+    return step

@@ -1,0 +1,19 @@
+"""Shared test fixtures.  NOTE: no XLA device-count override here — smoke
+tests and benches must see the host's real (single) device; only
+launch/dryrun.py forces 512 devices (per the dry-run protocol)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="session")
+def cpu_opts():
+    from repro.models.lm import ModelOpts
+    return ModelOpts(compute_dtype=jnp.float32, remat=False,
+                     attn_chunked_min_len=1 << 30, kv_chunk=16,
+                     ssd_chunk=8, ce_chunk=64)

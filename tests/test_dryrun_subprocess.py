@@ -1,0 +1,56 @@
+"""Dry-run harness integration: spawns the real launcher in a subprocess
+(the 512-device XLA override must precede jax init, so it cannot run
+in-process) against reduced configs, and checks the artifact contract."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run_dryrun(tmp_path, arch, shape, mesh):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    cmd = [sys.executable, "-m", "repro.launch.dryrun",
+           "--arch", arch, "--shape", shape, "--mesh", mesh,
+           "--smoke", "--out-dir", str(tmp_path)]
+    r = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                       timeout=1200, cwd=ROOT)
+    assert r.returncode == 0, r.stderr[-2000:]
+    return r
+
+
+@pytest.mark.slow
+def test_dryrun_train_cell_artifact(tmp_path):
+    _run_dryrun(tmp_path, "granite_3_8b", "train_4k", "single")
+    path = tmp_path / "granite_3_8b__train_4k__single.json"
+    res = json.loads(path.read_text())
+    assert res["status"] == "ok"
+    assert res["n_devices"] == 256
+    assert res["flops_per_device"] > 0
+    assert res["roofline"]["dominant"] in ("compute_s", "memory_s",
+                                           "ici_s", "dcn_s")
+    assert res["memory"]["peak_per_device"] > 0
+    assert res["collectives"]["n_collectives"] > 0
+
+
+@pytest.mark.slow
+def test_dryrun_multipod_decode_cell(tmp_path):
+    _run_dryrun(tmp_path, "gemma2_9b", "decode_32k", "multi")
+    path = tmp_path / "gemma2_9b__decode_32k__multi.json"
+    res = json.loads(path.read_text())
+    assert res["status"] == "ok"
+    assert res["n_devices"] == 512
+
+
+@pytest.mark.slow
+def test_dryrun_skip_rule(tmp_path):
+    _run_dryrun(tmp_path, "granite_3_8b", "long_500k", "single")
+    res = json.loads(
+        (tmp_path / "granite_3_8b__long_500k__single.json").read_text())
+    assert res["status"] == "skipped"
+    assert "full-attention" in res["reason"]

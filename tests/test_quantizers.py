@@ -1,0 +1,248 @@
+"""Unit + property tests for the UNIQ core (paper Sec. 3.1-3.2 invariants)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (GaussianModel, EmpiricalModel, fakequant,
+                        kquantile_dequantize, kquantile_quantize,
+                        inject_kquantile, lloyd_max, levels_quantize,
+                        levels_dequantize, uniform_fakequant)
+from repro.core import packing
+from repro.core.uniq import (CLEAN, FROZEN, NOISE, GradualSchedule,
+                             UniqConfig, transform_param, transform_tree,
+                             quantize_tensor)
+
+
+def _weights(shape=(512, 256), mu=0.001, sigma=0.03, seed=0):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape) * sigma + mu
+
+
+class TestGaussianModel:
+    def test_roundtrip(self):
+        w = _weights()
+        m = GaussianModel.fit(w)
+        err = jnp.max(jnp.abs(m.quantile(m.cdf(w)) - w))
+        assert err < 1e-4
+
+    def test_cdf_uniformizes(self):
+        """The uniformization trick: U = F(W) must be ~U[0,1] (paper 3.1)."""
+        w = _weights((4096, 64))
+        u = np.asarray(GaussianModel.fit(w).cdf(w)).ravel()
+        hist, _ = np.histogram(u, bins=10, range=(0, 1))
+        assert hist.min() > 0.8 * u.size / 10
+        assert hist.max() < 1.2 * u.size / 10
+
+    def test_empirical_matches_gaussian_on_normal_data(self):
+        w = _weights((8192,))
+        g = GaussianModel.fit(w)
+        e = EmpiricalModel.fit(w)
+        q = jnp.linspace(0.05, 0.95, 19)
+        assert jnp.max(jnp.abs(g.quantile(q) - e.quantile(q))) < 0.01
+
+
+class TestKQuantile:
+    @pytest.mark.parametrize("bits", [2, 3, 4, 8])
+    def test_balanced_bins(self, bits):
+        """Equiprobable bins: the defining property of the k-quantile
+        quantizer (paper Sec. 3.1)."""
+        k = 2 ** bits
+        w = _weights((1024, 256))
+        codes = np.asarray(
+            kquantile_quantize(w, GaussianModel.fit(w), k)).ravel()
+        counts = np.bincount(codes.astype(np.int32) - codes.min(),
+                             minlength=k)
+        expect = w.size / k
+        # 4-sigma multinomial sampling band around perfect balance
+        slack = 4.0 * (expect ** 0.5)
+        assert counts.min() > expect - slack - 0.02 * expect
+        assert counts.max() < expect + slack + 0.02 * expect
+
+    def test_dequant_is_bin_median(self):
+        """Representation level = bin median (paper: q_i = med(bin))."""
+        w = _weights((4096, 64))
+        m = GaussianModel.fit(w)
+        k = 8
+        codes = kquantile_quantize(w, m, k)
+        deq = kquantile_dequantize(codes, m, k)
+        w_np, c_np, d_np = map(np.asarray, (w, codes, deq))
+        for i in range(k):
+            vals = w_np[c_np == i]
+            lvl = d_np[c_np == i][0]
+            med = np.median(vals)
+            spread = vals.max() - vals.min() + 1e-9
+            assert abs(lvl - med) < 0.25 * spread
+
+    def test_uniform_data_reduces_to_uniform_quantizer(self):
+        """k-quantile == uniform quantizer when X ~ U (paper Sec. 3.1)."""
+        u = jax.random.uniform(jax.random.PRNGKey(1), (65536,))
+        e = EmpiricalModel.fit(u)
+        codes = kquantile_quantize(u, e, 8)
+        expected = jnp.clip(jnp.floor(u * 8), 0, 7).astype(jnp.int8)
+        assert float(jnp.mean((codes == expected).astype(jnp.float32))) > 0.99
+
+    def test_mse_ordering(self):
+        """k-means is l2-optimal; k-quantile trades MSE for tail-robustness
+        (paper Sec. 3.1 discussion)."""
+        w = _weights((512, 512))
+        mses = {m: float(jnp.mean((w - fakequant(w, 8, method=m)) ** 2))
+                for m in ["kquantile", "uniform", "kmeans"]}
+        assert mses["kmeans"] <= mses["uniform"] <= mses["kquantile"] * 1.5
+
+
+class TestLloydMax:
+    def test_levels_are_centroids(self):
+        w = _weights((16384,))
+        levels = lloyd_max(w, 8, iters=40)
+        codes = levels_quantize(w, levels)
+        w_np, c_np, l_np = map(np.asarray, (w, codes, levels))
+        for i in range(8):
+            sel = w_np[c_np == i]
+            if sel.size:
+                assert abs(sel.mean() - l_np[i]) < 2e-3
+
+    def test_sorted(self):
+        levels = np.asarray(lloyd_max(_weights((4096,)), 16))
+        assert (np.diff(levels) >= -1e-7).all()
+
+
+class TestNoiseInjection:
+    def test_noise_bounded_in_u_space(self):
+        """e ~ U[-1/2k, 1/2k]: u-space perturbation bounded (paper 3.2)."""
+        w = _weights()
+        m = GaussianModel.fit(w)
+        k = 16
+        w_hat = inject_kquantile(w, jax.random.PRNGKey(3), k, model=m)
+        du = jnp.abs(m.cdf(w_hat) - m.cdf(w))
+        assert float(jnp.quantile(du, 0.999)) <= 0.5 / k + 1e-3
+
+    def test_unbiased(self):
+        w = _weights((2048, 256))
+        w_hat = inject_kquantile(w, jax.random.PRNGKey(4), 16)
+        assert abs(float(jnp.mean(w_hat - w))) < 2e-4
+
+    def test_differentiable(self):
+        w = _weights((128, 128))
+        g = jax.grad(lambda w: jnp.sum(
+            inject_kquantile(w, jax.random.PRNGKey(5), 16) ** 2))(w)
+        assert bool(jnp.all(jnp.isfinite(g)))
+        assert float(jnp.linalg.norm(g)) > 0
+
+
+class TestTransform:
+    def test_modes(self):
+        w = _weights()
+        cfg = UniqConfig(w_bits=4)
+        rng = jax.random.PRNGKey(0)
+        assert jnp.allclose(transform_param(w, rng, jnp.int32(CLEAN), cfg), w)
+        wf = transform_param(w, rng, jnp.int32(FROZEN), cfg)
+        m = GaussianModel.fit(w)
+        expect = kquantile_dequantize(kquantile_quantize(w, m, 16), m, 16)
+        assert float(jnp.max(jnp.abs(wf - expect))) < 1e-6
+        # frozen has zero gradient; clean has identity gradient
+        gf = jax.grad(lambda w: jnp.sum(transform_param(
+            w, rng, jnp.int32(FROZEN), cfg) ** 2))(w)
+        assert float(jnp.max(jnp.abs(gf))) == 0.0
+
+    def test_frozen_k_levels(self):
+        w = _weights()
+        cfg = UniqConfig(w_bits=3)
+        wf = transform_param(w, jax.random.PRNGKey(0), jnp.int32(FROZEN), cfg)
+        assert len(np.unique(np.asarray(wf))) <= 8
+
+    def test_tree_filter(self):
+        params = {"layers": {"wq": _weights((4, 64, 32)),
+                             "attn_norm": jnp.ones((4, 64))},
+                  "embed": _weights((256, 64))}
+        out = transform_tree(params, jax.random.PRNGKey(0),
+                             jnp.int32(FROZEN), UniqConfig(w_bits=4))
+        assert jnp.allclose(out["layers"]["attn_norm"], 1.0)
+        assert not jnp.allclose(out["layers"]["wq"], params["layers"]["wq"])
+        assert not jnp.allclose(out["embed"], params["embed"])
+
+
+class TestGradualSchedule:
+    def test_stage_progression(self):
+        s = GradualSchedule(n_layers=8, n_blocks=4, total_steps=80,
+                            iterations=2)
+        m0 = np.asarray(s.modes_at(0))
+        assert (m0[:2] == NOISE).all() and (m0[2:] == CLEAN).all()
+        m_mid = np.asarray(s.modes_at(30))
+        assert (m_mid[:6] == FROZEN).all() and (m_mid[6:] == NOISE).all()
+        m_end = np.asarray(s.modes_at(10_000))
+        assert (m_end == FROZEN).all()
+
+    def test_second_iteration_renoise(self):
+        s = GradualSchedule(n_layers=4, n_blocks=4, total_steps=80,
+                            iterations=2)
+        m = np.asarray(s.modes_at(45))  # stage 4 -> iter 1, block 0
+        assert m[0] == NOISE and (m[1:] == FROZEN).all()
+
+    def test_no_recompile_across_stages(self):
+        s = GradualSchedule(n_layers=4, n_blocks=2, total_steps=40)
+        f = jax.jit(s.modes_at)
+        _ = f(0), f(25), f(1000)
+        assert f._cache_size() == 1
+
+
+class TestPacking:
+    @given(st.integers(0, 10_000))
+    @settings(max_examples=30, deadline=None)
+    def test_roundtrip(self, seed):
+        codes = jax.random.randint(jax.random.PRNGKey(seed), (8, 16), 0, 16)
+        assert bool(jnp.all(
+            packing.unpack_int4(packing.pack_int4(codes)) == codes))
+
+    def test_quantize_tensor_bytes(self):
+        w = _weights((128, 256))
+        qt4 = quantize_tensor(w, 4)
+        qt8 = quantize_tensor(w, 8)
+        assert qt4.codes.nbytes * 2 == qt8.codes.nbytes == w.size
+        err4 = jnp.max(jnp.abs(qt4.dequantize(jnp.float32) - w))
+        err8 = jnp.max(jnp.abs(qt8.dequantize(jnp.float32) - w))
+        assert err8 < err4 < 0.2
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property tests over the quantization invariants
+# ---------------------------------------------------------------------------
+
+@given(bits=st.integers(2, 8),
+       sigma=st.floats(1e-3, 10.0),
+       mu=st.floats(-1.0, 1.0),
+       seed=st.integers(0, 2 ** 16))
+@settings(max_examples=40, deadline=None)
+def test_property_quant_dequant_idempotent(bits, sigma, mu, seed):
+    """Q(deQ(Q(w))) == Q(w): quantization is a projection."""
+    w = jax.random.normal(jax.random.PRNGKey(seed), (64, 64)) * sigma + mu
+    m = GaussianModel.fit(w)
+    k = 2 ** bits
+    c1 = kquantile_quantize(w, m, k)
+    w1 = kquantile_dequantize(c1, m, k)
+    c2 = kquantile_quantize(w1, m, k)
+    assert bool(jnp.all(c1 == c2))
+
+
+@given(bits=st.integers(2, 6), seed=st.integers(0, 2 ** 16))
+@settings(max_examples=30, deadline=None)
+def test_property_dequant_error_bounded(bits, seed):
+    """|w - deQ(Q(w))| in u-space is bounded by the bin width 1/k."""
+    w = jax.random.normal(jax.random.PRNGKey(seed), (128, 64)) * 0.05
+    m = GaussianModel.fit(w)
+    k = 2 ** bits
+    wq = kquantile_dequantize(kquantile_quantize(w, m, k), m, k)
+    du = jnp.abs(m.cdf(wq) - m.cdf(w))
+    assert float(jnp.max(du)) <= 1.0 / k + 1e-4
+
+
+@given(seed=st.integers(0, 2 ** 16), bits=st.integers(2, 6))
+@settings(max_examples=25, deadline=None)
+def test_property_monotone(seed, bits):
+    """Quantization preserves order (monotone non-decreasing)."""
+    w = jnp.sort(jax.random.normal(jax.random.PRNGKey(seed), (512,)))
+    m = GaussianModel.fit(w)
+    wq = np.asarray(kquantile_dequantize(
+        kquantile_quantize(w, m, 2 ** bits), m, 2 ** bits))
+    assert (np.diff(wq) >= -1e-7).all()
