@@ -13,6 +13,7 @@ SUITES = [
     ("bops", "benchmarks.bops_table"),          # paper Table 1 / Fig 1
     ("kernels", "benchmarks.kernel_bench"),     # quantization ops
     ("roofline", "benchmarks.roofline"),        # EXPERIMENTS Sec. Roofline
+    ("engine", "benchmarks.engine_bench"),      # EXPERIMENTS Sec. Perf engine
     ("table3", "benchmarks.quantizer_compare"),  # paper Table 3
     ("table2", "benchmarks.bitwidth_sweep"),    # paper Table 2
     ("tableA1", "benchmarks.scratch_vs_finetune"),  # paper Table A.1

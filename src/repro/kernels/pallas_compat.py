@@ -1,0 +1,25 @@
+"""Version shims for the Pallas TPU API surface.
+
+The kernels target the current API (``pltpu.CompilerParams``,
+``pltpu.InterpretParams``); older jax releases (< 0.6) name the first
+``TPUCompilerParams`` and take a plain boolean ``interpret`` flag.  Kernel
+call sites go through these two helpers so both resolve on either version.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+
+def compiler_params(**kwargs):
+    cls = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+    return cls(**kwargs)
+
+
+def interpret_mode(on: bool):
+    """Value for pallas_call(interpret=...): InterpretParams when the class
+    exists, else the legacy boolean."""
+    if not on:
+        return False
+    cls = getattr(pltpu, "InterpretParams", None)
+    return cls() if cls is not None else True

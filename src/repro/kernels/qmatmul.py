@@ -30,6 +30,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import pallas_compat as pc
+
 _SQRT2 = 1.4142135623730951
 _EPS = 1e-6
 
@@ -100,10 +102,10 @@ def qmatmul(a: jax.Array, w_packed: jax.Array, mu: jax.Array,
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pc.compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
-        interpret=pltpu.InterpretParams() if interpret else False,
+        interpret=pc.interpret_mode(interpret),
     )(a, w_packed, mu, sigma)
     return out.astype(out_dtype)
 
@@ -154,9 +156,9 @@ def qmatmul_a8(a_codes: jax.Array, a_scale: jax.Array, w_packed: jax.Array,
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pc.compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
-        interpret=pltpu.InterpretParams() if interpret else False,
+        interpret=pc.interpret_mode(interpret),
     )(a_scale, a_codes, w_packed, mu, sigma)
     return out.astype(out_dtype)

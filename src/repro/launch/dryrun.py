@@ -227,6 +227,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, args) -> dict:
 
     mem = compiled.memory_analysis()
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):      # jax<0.6: one dict per device
+        ca = ca[0] if ca else {}
     txt = compiled.as_text()
     stats = module_stats(txt, pod_size=256)
     coll = stats["collectives"]

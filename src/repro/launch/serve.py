@@ -1,11 +1,20 @@
 """Serving driver: batched generation with UNIQ-quantized weights.
 
+Closed-batch smoke (legacy path):
+
     PYTHONPATH=src python -m repro.launch.serve --arch granite_3_8b \
         --smoke --w-bits 4 --batch 4 --prompt-len 16 --new-tokens 32
 
+Continuous-batching engine under a synthetic Poisson request stream
+(reports tokens/s, time-to-first-token, slot occupancy):
+
+    PYTHONPATH=src python -m repro.launch.serve --arch granite_3_8b \
+        --smoke --engine --w-bits 4 --requests 16 --rate 8 \
+        --max-slots 8 --new-tokens 32
+
 Loads (or random-inits) weights, k-quantile-quantizes them to --w-bits,
-and decodes a batch of synthetic prompts, reporting tokens/s and agreement
-with the bf16 model (greedy-match rate).
+and serves synthetic prompts; the closed-batch path also reports greedy
+agreement with the bf16 model.
 """
 
 from __future__ import annotations
@@ -15,11 +24,126 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import base as cb
 from repro.models import model
 from repro.models.lm import ModelOpts
 from repro.serve import serve as serve_lib
+from repro.serve.engine import Engine, EngineConfig, Request, SamplingParams
+
+
+def _percentile(xs, q):
+    return float(np.percentile(np.asarray(xs), q)) if len(xs) else 0.0
+
+
+def run_engine_stream(params, cfg, opts, args) -> dict:
+    """Drive the engine with a Poisson arrival stream (rate req/s).
+
+    Requests are submitted when their arrival time passes on the wall
+    clock, so TTFT includes genuine queueing delay under load.
+    """
+    rng = np.random.default_rng(args.seed)
+    n = args.requests
+    lens = rng.integers(max(2, args.prompt_len // 2), args.prompt_len + 1,
+                        size=n)
+    arrivals = np.cumsum(rng.exponential(1.0 / args.rate, size=n))
+    reqs = [Request(uid=i,
+                    prompt=rng.integers(0, cfg.vocab, size=int(lens[i]),
+                                        dtype=np.int64).astype(np.int32),
+                    sampling=SamplingParams(
+                        temperature=args.temperature,
+                        max_new_tokens=args.new_tokens,
+                        seed=int(i)))
+            for i in range(n)]
+
+    ec = EngineConfig(max_slots=args.max_slots, max_len=args.max_len,
+                      prefill_batch=args.prefill_batch)
+    eng = Engine(params, cfg, opts, ec)
+
+    # warm THIS engine's jitted steps (jit caches live on the instance):
+    # compile the decode shape and EVERY prefill bucket this request set
+    # will hit, outside the timed region
+    from repro.serve.scheduler import bucket_len
+    seen = set()
+    for r in reqs:
+        b = min(bucket_len(r.prompt.size, ec.min_bucket), ec.max_len)
+        if b not in seen:
+            seen.add(b)
+            eng.generate([Request(uid=-1 - len(seen), prompt=r.prompt.copy(),
+                                  sampling=SamplingParams(max_new_tokens=2))])
+    eng.reset_stats()
+
+    outs = []
+    occupancy = []
+    t0 = time.perf_counter()
+    next_i = 0
+    while next_i < n or eng.has_work:
+        now = time.perf_counter() - t0
+        while next_i < n and arrivals[next_i] <= now:
+            reqs[next_i].arrival_time = t0 + arrivals[next_i]
+            eng.submit(reqs[next_i])
+            next_i += 1
+        if not eng.has_work:
+            time.sleep(min(1e-3, max(0.0, arrivals[next_i] - now)))
+            continue
+        outs.extend(eng.step())
+        occupancy.append(eng.scheduler.n_running)
+    wall = time.perf_counter() - t0
+
+    new_tokens = sum(len(o.token_ids) for o in outs)
+    ttfts = [o.ttft_s for o in outs]
+    lats = [o.latency_s for o in outs]
+    stats = {
+        "requests": len(outs),
+        "new_tokens": new_tokens,
+        "prompt_tokens": eng.n_prefill_tokens,
+        "wall_s": wall,
+        "tok_per_s": new_tokens / max(wall, 1e-9),
+        "ttft_mean_s": float(np.mean(ttfts)) if ttfts else 0.0,
+        "ttft_p50_s": _percentile(ttfts, 50),
+        "ttft_p95_s": _percentile(ttfts, 95),
+        "latency_p50_s": _percentile(lats, 50),
+        "decode_steps": eng.n_decode_steps,
+        "prefill_calls": eng.n_prefill_calls,
+        "mean_occupancy": float(np.mean(occupancy)) if occupancy else 0.0,
+        "evicted": eng.scheduler.n_evicted,
+    }
+    print(f"[engine] {stats['requests']} requests "
+          f"({stats['prompt_tokens']} prompt + {new_tokens} new tokens) "
+          f"in {wall:.2f}s -> {stats['tok_per_s']:.1f} new tok/s")
+    print(f"[engine] TTFT mean {stats['ttft_mean_s'] * 1e3:.0f}ms "
+          f"p50 {stats['ttft_p50_s'] * 1e3:.0f}ms "
+          f"p95 {stats['ttft_p95_s'] * 1e3:.0f}ms; "
+          f"latency p50 {stats['latency_p50_s'] * 1e3:.0f}ms")
+    print(f"[engine] {stats['decode_steps']} decode steps, "
+          f"{stats['prefill_calls']} prefill calls, mean occupancy "
+          f"{stats['mean_occupancy']:.2f}/{args.max_slots} slots, "
+          f"{stats['evicted']} evicted")
+    return stats
+
+
+def run_closed_batch(params, cfg, opts, args) -> None:
+    prompts = jax.random.randint(jax.random.PRNGKey(1),
+                                 (args.batch, args.prompt_len), 0, cfg.vocab)
+    sc = serve_lib.ServeConfig(w_bits=args.w_bits, a_bits=args.a_bits)
+
+    out_fp = serve_lib.generate(params, cfg, opts, sc, prompts,
+                                args.new_tokens)
+    t0 = time.time()
+    params_q = serve_lib.prepare_params(params, sc)
+    sopts = serve_lib.make_serve_opts(opts, sc)
+    out_q = serve_lib.generate(params_q, cfg, sopts, sc, prompts,
+                               args.new_tokens) \
+        if args.w_bits < 16 else out_fp
+    dt = time.time() - t0
+    match = float(jnp.mean((out_fp == out_q).astype(jnp.float32)))
+    n_tok = args.batch * args.new_tokens
+    print(f"[serve] {n_tok} tokens in {dt:.2f}s "
+          f"({n_tok / max(dt, 1e-9):.1f} tok/s host-loop)")
+    print(f"[serve] W{args.w_bits} greedy agreement with bf16: "
+          f"{match * 100:.1f}%")
+    print("sample (quantized):", out_q[0][:16].tolist())
 
 
 def main(argv=None):
@@ -32,33 +156,30 @@ def main(argv=None):
     p.add_argument("--prompt-len", type=int, default=16)
     p.add_argument("--new-tokens", type=int, default=32)
     p.add_argument("--seed", type=int, default=0)
+    # engine mode
+    p.add_argument("--engine", action="store_true",
+                   help="continuous-batching engine + Poisson stream")
+    p.add_argument("--requests", type=int, default=16)
+    p.add_argument("--rate", type=float, default=8.0,
+                   help="Poisson arrival rate (requests/s)")
+    p.add_argument("--max-slots", type=int, default=8)
+    p.add_argument("--max-len", type=int, default=256)
+    p.add_argument("--prefill-batch", type=int, default=4)
+    p.add_argument("--temperature", type=float, default=0.0)
     args = p.parse_args(argv)
 
     cfg = cb.get_smoke(args.arch) if args.smoke else cb.get(args.arch)
     opts = ModelOpts(compute_dtype=jnp.float32, remat=False,
                      attn_chunked_min_len=1 << 30, ssd_chunk=16)
-    rng = jax.random.PRNGKey(args.seed)
-    params = model.init(rng, cfg)
-    prompts = jax.random.randint(jax.random.PRNGKey(1),
-                                 (args.batch, args.prompt_len), 0, cfg.vocab)
-    sc = serve_lib.ServeConfig(w_bits=args.w_bits, a_bits=args.a_bits)
+    params = model.init(jax.random.PRNGKey(args.seed), cfg)
 
-    out_fp = serve_lib.generate(params, cfg, opts, sc, prompts,
-                                args.new_tokens)
-    t0 = time.time()
-    params_q = serve_lib.prepare_params(params, sc)
-    sopts = serve_lib.make_serve_opts(opts, sc)
-    out_q = serve_lib.generate(params_q, cfg, sopts, prompts,
-                               args.new_tokens) \
-        if args.w_bits < 16 else out_fp
-    dt = time.time() - t0
-    match = float(jnp.mean((out_fp == out_q).astype(jnp.float32)))
-    n_tok = args.batch * args.new_tokens
-    print(f"[serve] {n_tok} tokens in {dt:.2f}s "
-          f"({n_tok / max(dt, 1e-9):.1f} tok/s host-loop)")
-    print(f"[serve] W{args.w_bits} greedy agreement with bf16: "
-          f"{match * 100:.1f}%")
-    print("sample (quantized):", out_q[0][:16].tolist())
+    if args.engine:
+        sc = serve_lib.ServeConfig(w_bits=args.w_bits, a_bits=args.a_bits)
+        params = serve_lib.prepare_params(params, sc)
+        opts = serve_lib.make_serve_opts(opts, sc)
+        run_engine_stream(params, cfg, opts, args)
+    else:
+        run_closed_batch(params, cfg, opts, args)
 
 
 if __name__ == "__main__":

@@ -346,11 +346,12 @@ def _moe_ep_sharded(h, router_w, eg, eu, ed, mcfg, opts: ModelOpts):
 
 
 def _shard_map_compat(f, mesh, in_specs, out_specs):
-    """jax>=0.8 renamed check_rep -> check_vma; support both."""
+    """jax>=0.8 renamed check_rep -> check_vma, and jax<0.6 has no
+    top-level jax.shard_map at all; support all three vintages."""
     try:
         return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
                              out_specs=out_specs, check_vma=False)
-    except TypeError:
+    except (AttributeError, TypeError):
         from jax.experimental.shard_map import shard_map as _sm
         return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
                    check_rep=False)
@@ -552,10 +553,16 @@ def _norm_final(x, params, cfg: ArchConfig):
 
 
 def forward_prefill(params, cfg: ArchConfig, opts: ModelOpts, batch,
-                    pad_to: Optional[int] = None):
+                    pad_to: Optional[int] = None,
+                    last_idx: Optional[Array] = None):
     """Prefill: run the prompt, emit last-position logits + per-layer KV.
 
     Returns (logits (B, V), cache dict with k/v (L, B, S, KV, hd)).
+
+    ``last_idx`` (B,) int32 selects a per-sequence "last" position instead
+    of S-1 — the batched-prefill path for right-padded prompt groups (the
+    logits at position i depend only on tokens <= i under the causal mask,
+    so padding beyond last_idx is inert; see serve/engine.py).
     """
     tokens = batch["tokens"]
     x = _embed_tokens(params, cfg, opts, tokens)
@@ -566,7 +573,8 @@ def forward_prefill(params, cfg: ArchConfig, opts: ModelOpts, batch,
     positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
     x, kvs = _scan_layers(params, cfg, opts, x, positions, collect_kv=True)
     x = _norm_final(x, params, cfg)
-    last = x[:, -1]
+    last = x[:, -1] if last_idx is None \
+        else x[jnp.arange(B), jnp.clip(last_idx, 0, S - 1)]
     logits = jnp.dot(last, materialize(_head_weight(params, cfg), last.dtype),
                      preferred_element_type=jnp.float32)
     logits = softcap(logits, cfg.final_logit_cap)

@@ -20,7 +20,8 @@ from repro.models import encdec, hybrid, lm
 from repro.models.lm import ModelOpts
 
 __all__ = ["ModelOpts", "init", "loss_fn", "prefill", "decode",
-           "cache_specs", "init_cache", "quantize_for_serving"]
+           "cache_specs", "init_cache", "quantize_for_serving",
+           "supports_slot_cache", "init_slot_cache", "cache_insert"]
 
 
 def init(rng: jax.Array, cfg: ArchConfig) -> Any:
@@ -46,14 +47,21 @@ def loss_fn(params, cfg: ArchConfig, opts: ModelOpts, batch,
     return lm.forward_train(params, cfg, opts, batch, uniq_scan=uniq_scan)
 
 
-def prefill(params, cfg: ArchConfig, opts: ModelOpts, batch):
-    if cfg.family == "audio":
-        return encdec.forward_prefill_encdec(params, cfg, opts, batch)
-    if cfg.family == "ssm":
-        return hybrid.prefill_mamba(params, cfg, opts, batch)
-    if cfg.family == "hybrid":
+def prefill(params, cfg: ArchConfig, opts: ModelOpts, batch,
+            last_idx=None):
+    """``last_idx`` (B,) selects per-sequence last positions for padded
+    batched prefill (decoder-only families; see lm.forward_prefill)."""
+    if cfg.family in ("audio", "ssm", "hybrid"):
+        if last_idx is not None:
+            raise ValueError(
+                f"last_idx is unsupported for family {cfg.family}: padded "
+                "batched prefill only covers decoder-only KV families")
+        if cfg.family == "audio":
+            return encdec.forward_prefill_encdec(params, cfg, opts, batch)
+        if cfg.family == "ssm":
+            return hybrid.prefill_mamba(params, cfg, opts, batch)
         return hybrid.prefill_zamba(params, cfg, opts, batch)
-    return lm.forward_prefill(params, cfg, opts, batch)
+    return lm.forward_prefill(params, cfg, opts, batch, last_idx=last_idx)
 
 
 def decode(params, cfg: ArchConfig, opts: ModelOpts, cache, tokens,
@@ -90,6 +98,49 @@ def init_cache(cfg: ArchConfig, shape: ShapeConfig, dtype=jnp.bfloat16):
     if cfg.family == "hybrid":
         return hybrid.init_cache_zamba(cfg, B, S, dtype)
     return lm.init_cache(cfg, B, S, dtype)
+
+
+# --------------------------------------------------------------------------
+# Slot-based serving cache (continuous batching; DESIGN.md Sec. 6)
+# --------------------------------------------------------------------------
+
+def supports_slot_cache(cfg: ArchConfig) -> bool:
+    """Slot-cache serving covers the families whose cache is the plain
+    (L, B, S, KV, hd) KV layout written positionally by lm.decode_step.
+    SSM/hybrid state caches and the audio enc-dec cache need a different
+    insert rule and are served by the legacy batched path instead."""
+    return cfg.family in ("dense", "moe")
+
+
+def init_slot_cache(cfg: ArchConfig, max_slots: int, max_len: int,
+                    dtype=jnp.bfloat16):
+    """Zeroed slot cache: one fixed (max_len) KV region per decode slot."""
+    if not supports_slot_cache(cfg):
+        raise ValueError(f"slot cache unsupported for family {cfg.family}")
+    return lm.init_cache(cfg, max_slots, max_len, dtype)
+
+
+def cache_insert(cache, prefill_cache, slots):
+    """Scatter a prefill KV block into decode slots.
+
+    cache          : {"k","v"} (L, max_slots, max_len, KV, hd)
+    prefill_cache  : {"k","v"} (L, G, S_pad, KV, hd) from a (padded) batched
+                     prefill of G admitted prompts
+    slots          : (G,) int32 destination slot ids
+
+    Rows past a prompt's true length hold right-padding garbage, but they
+    are never attended: decode at position t masks keys to k_pos <= t and
+    overwrites row t before attending, so every visible row has been
+    written by either the prompt prefix or an earlier decode step.
+    """
+    s_pad = prefill_cache["k"].shape[2]
+    slots = jnp.asarray(slots, jnp.int32)
+    return {
+        "k": cache["k"].at[:, slots, :s_pad].set(
+            prefill_cache["k"].astype(cache["k"].dtype)),
+        "v": cache["v"].at[:, slots, :s_pad].set(
+            prefill_cache["v"].astype(cache["v"].dtype)),
+    }
 
 
 def quantize_for_serving(params, bits: int, per_channel: bool = True):

@@ -30,6 +30,14 @@ import jax.numpy as jnp
 Array = jax.Array
 
 
+def axis_size(axis_name):
+    """jax<0.6 has no jax.lax.axis_size; psum(1) is the portable spelling.
+    Public: models/moe.py uses it inside shard_map regions too."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
 def _absmax_quant(g: Array, bits: int = 8):
     qmax = 2.0 ** (bits - 1) - 1.0
     # keepdims always: scale must broadcast against codes after the
@@ -56,7 +64,7 @@ def compressed_pmean(tree: Any, axis_name: str, bits: int = 8) -> Any:
 
     Must run inside a shard_map region where ``axis_name`` is manual.
     """
-    n = jax.lax.axis_size(axis_name)
+    n = axis_size(axis_name)
 
     def one(g):
         if g.ndim <= 1 or g.size <= 128 or not jnp.issubdtype(
@@ -97,10 +105,26 @@ def make_pod_compressed_grads(loss_and_grads_fn, mesh, bits: int = 8):
     def wrapped(params, batch, rng):
         batch_specs = jax.tree.map(
             lambda x: P("pod", *(None,) * (x.ndim - 1)), batch)
-        return jax.shard_map(
-            region, mesh=mesh, axis_names={"pod"},
+        return pod_shard_map(
+            region, mesh,
             in_specs=(P(), batch_specs, P()),
-            out_specs=(P(), P()),
-            check_vma=False)(params, batch, rng)
+            out_specs=(P(), P()))(params, batch, rng)
 
     return wrapped
+
+
+def pod_shard_map(f, mesh, in_specs, out_specs, manual=("pod",)):
+    """shard_map with only ``manual`` axes manual (partial-manual region).
+
+    jax>=0.6 spells this jax.shard_map(axis_names=...); older releases
+    spell it jax.experimental.shard_map(auto=<complement>).
+    """
+    try:
+        return jax.shard_map(f, mesh=mesh, axis_names=set(manual),
+                             in_specs=in_specs, out_specs=out_specs,
+                             check_vma=False)
+    except (AttributeError, TypeError):
+        from jax.experimental.shard_map import shard_map as _sm
+        auto = frozenset(mesh.axis_names) - set(manual)
+        return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                   check_rep=False, auto=auto)

@@ -1,1 +1,9 @@
-"""repro.serve"""
+"""repro.serve — quantized serving.
+
+``serve``     : prefill/decode steps + closed-batch ``generate`` driver.
+``scheduler`` : FCFS slot scheduler for the continuous-batching engine.
+``engine``    : slot-cache continuous-batching engine (DESIGN.md Sec. 6).
+"""
+
+from repro.serve.engine import (Engine, EngineConfig, Request,  # noqa: F401
+                                RequestOutput, SamplingParams)

@@ -1,0 +1,299 @@
+"""Continuous-batching serving engine over UNIQ-quantized weights.
+
+The legacy ``serve.generate`` path prefills token-by-token with one fixed
+batch: every request in the batch must arrive together, finish together,
+and pay a host-loop step per *prompt* token.  This engine serves an open
+request stream instead (DESIGN.md Sec. 6):
+
+  * **slot KV cache** — one device-resident (L, max_slots, max_len, KV, hd)
+    cache; each running sequence owns a slot (a fixed max_len region).
+    Admission writes the slot, completion/eviction frees it — no
+    reallocation, no recompilation.
+  * **batched prefill** — an admitted group runs ONE forward over the whole
+    padded prompt block (``model.prefill`` with per-sequence ``last_idx``),
+    then scatters its KV into the slots via ``model.cache_insert``.  Prompt
+    cost drops from S0 host-loop decode steps to a single jit call.
+  * **continuous decode** — one jitted fixed-shape step advances *all*
+    active slots each iteration; sequences join and leave mid-stream
+    (admitted into free slots, evicted when their cache region is
+    exhausted) without disturbing the others.
+  * **per-request sampling** — temperature / top-k / stop conditions are
+    per-slot *arrays* traced into the step, so heterogeneous sampling
+    never forks the compiled graph.
+
+Fixed jit shapes: the decode step always sees (max_slots, 1) tokens; the
+prefill sees (prefill_batch, bucket) token blocks, bucket a power of two —
+the compile count is bounded by the bucket count, not the traffic.
+
+The weights may be k-quantile coded (``model.quantize_for_serving``): both
+prefill and decode then dequantize on the fly through the qmatmul path,
+which is exactly the deployment regime the paper's BOPs argument targets
+(EXPERIMENTS.md Sec. Perf).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import model
+from repro.models.lm import ModelOpts
+from repro.serve.scheduler import (Request, SamplingParams, ScheduledSeq,
+                                   Scheduler)
+
+__all__ = ["EngineConfig", "Engine", "Request", "SamplingParams",
+           "RequestOutput"]
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    max_slots: int = 8          # concurrent sequences (decode batch)
+    max_len: int = 256          # per-slot KV region (prompt + generation)
+    prefill_batch: int = 4      # prompts prefilled per admission round
+    min_bucket: int = 16        # smallest padded prompt length
+
+
+@dataclasses.dataclass
+class RequestOutput:
+    uid: int
+    prompt: np.ndarray
+    token_ids: List[int]
+    finish_reason: str          # "stop" | "length" | "evicted"
+    ttft_s: float               # arrival -> first token (wall clock)
+    latency_s: float            # arrival -> completion (wall clock)
+
+
+def _sample_batch(logits: jax.Array, keys: jax.Array, temps: jax.Array,
+                  top_ks: jax.Array) -> jax.Array:
+    """Per-row sampling: greedy at temperature 0, else categorical with an
+    optional top-k filter.  All controls are traced arrays (B,)."""
+    V = logits.shape[-1]
+
+    def one(lg, key, t, k):
+        greedy = jnp.argmax(lg).astype(jnp.int32)
+        lt = lg.astype(jnp.float32) / jnp.maximum(t, 1e-6)
+        kth = jnp.sort(lt)[::-1][jnp.clip(k - 1, 0, V - 1)]
+        lt = jnp.where((k > 0) & (lt < kth), -jnp.inf, lt)
+        samp = jax.random.categorical(key, lt).astype(jnp.int32)
+        return jnp.where(t <= 0.0, greedy, samp)
+
+    return jax.vmap(one)(logits, keys, temps, top_ks)
+
+
+def _fold_keys(seeds: jax.Array, positions: jax.Array) -> jax.Array:
+    """Deterministic per-(seed, position) keys: a request's sample stream
+    does not depend on which slot or batch it lands in."""
+    base = jax.random.PRNGKey(0)
+    return jax.vmap(lambda s, p: jax.random.fold_in(
+        jax.random.fold_in(base, s), p))(seeds, positions)
+
+
+class _SlotState:
+    """Host-side bookkeeping for one running sequence."""
+
+    def __init__(self, req: Request, admit_time: float):
+        self.req = req
+        self.tokens: List[int] = []
+        self.admit_time = admit_time
+        self.first_token_time: Optional[float] = None
+
+
+class Engine:
+    """Continuous-batching engine.  ``submit`` requests, call ``step`` in a
+    loop (or ``generate`` for a closed set); finished ``RequestOutput``s
+    are returned as they complete."""
+
+    def __init__(self, params, cfg: ArchConfig, opts: ModelOpts,
+                 ec: EngineConfig = EngineConfig()):
+        if not model.supports_slot_cache(cfg):
+            raise ValueError(
+                f"engine serves decoder-only KV families; got {cfg.family}")
+        self.cfg, self.ec = cfg, ec
+        self.opts = dataclasses.replace(opts, remat=False)
+        self.params = params
+        cache_dtype = jnp.float32 if opts.compute_dtype == jnp.float32 \
+            else jnp.bfloat16
+        self._cache = model.init_slot_cache(cfg, ec.max_slots, ec.max_len,
+                                            cache_dtype)
+        self.scheduler = Scheduler(ec.max_slots, ec.prefill_batch,
+                                   ec.min_bucket, ec.max_len)
+        M = ec.max_slots
+        self._positions = np.zeros((M,), np.int32)   # next KV write index
+        self._cur_tok = np.zeros((M,), np.int32)     # last sampled token
+        self._temps = np.zeros((M,), np.float32)
+        self._topks = np.zeros((M,), np.int32)
+        self._seeds = np.zeros((M,), np.int32)
+        self._slots: Dict[int, _SlotState] = {}      # active slot -> state
+        self.n_decode_steps = 0
+        self.n_prefill_calls = 0
+        self.n_prefill_tokens = 0
+
+        cfg_, opts_ = self.cfg, self.opts
+
+        def decode_fn(params, cache, tokens, positions, temps, topks, seeds):
+            logits, cache = model.decode(params, cfg_, opts_, cache,
+                                         tokens[:, None], positions)
+            keys = _fold_keys(seeds, positions)
+            return _sample_batch(logits, keys, temps, topks), cache
+
+        def prefill_fn(params, tokens, last_idx, temps, topks, seeds):
+            logits, kv = model.prefill(params, cfg_, opts_,
+                                       {"tokens": tokens}, last_idx=last_idx)
+            keys = _fold_keys(seeds, last_idx)
+            return _sample_batch(logits, keys, temps, topks), kv
+
+        self._decode_step = jax.jit(decode_fn, donate_argnums=(1,))
+        self._prefill_step = jax.jit(prefill_fn)
+        self._cache_insert = jax.jit(model.cache_insert, donate_argnums=(0,))
+
+    # -- request side ------------------------------------------------------
+
+    def submit(self, request: Request) -> None:
+        if request.arrival_time == 0.0:
+            request.arrival_time = time.perf_counter()
+        self.scheduler.submit(request)
+
+    def reset_stats(self) -> None:
+        """Zero perf counters (e.g. after a compile-warmup request); the
+        jit caches and slot state are untouched."""
+        self.n_decode_steps = 0
+        self.n_prefill_calls = 0
+        self.n_prefill_tokens = 0
+        self.scheduler.n_submitted = 0
+        self.scheduler.n_completed = 0
+        self.scheduler.n_evicted = 0
+
+    @property
+    def has_work(self) -> bool:
+        return self.scheduler.has_work
+
+    # -- admission (batched prefill) ---------------------------------------
+
+    def _admit(self, group: Sequence[ScheduledSeq]) -> List[RequestOutput]:
+        now = time.perf_counter()
+        G, P = len(group), self.ec.prefill_batch
+        bucket = group[0].bucket
+        toks = np.zeros((P, bucket), np.int32)
+        last = np.zeros((P,), np.int32)
+        temps = np.zeros((P,), np.float32)
+        topks = np.zeros((P,), np.int32)
+        seeds = np.zeros((P,), np.int32)
+        slots = np.zeros((P,), np.int32)
+        for i, ss in enumerate(group):
+            sp = ss.request.sampling
+            n = ss.request.prompt.size
+            toks[i, :n] = ss.request.prompt
+            last[i] = n - 1
+            temps[i], topks[i], seeds[i] = sp.temperature, sp.top_k, sp.seed
+            slots[i] = ss.slot
+        # pad rows beyond G with copies of row 0: identical KV scattered to
+        # the same slot, so the padded insert is a harmless repeat write
+        # and every bucket compiles exactly one (P, bucket) prefill.
+        for i in range(G, P):
+            toks[i], last[i], slots[i] = toks[0], last[0], slots[0]
+
+        first_tok, kv = self._prefill_step(self.params, jnp.asarray(toks),
+                                           jnp.asarray(last),
+                                           jnp.asarray(temps),
+                                           jnp.asarray(topks),
+                                           jnp.asarray(seeds))
+        self._cache = self._cache_insert(self._cache, kv, jnp.asarray(slots))
+        self.n_prefill_calls += 1
+        self.n_prefill_tokens += int(sum(s.request.prompt.size
+                                         for s in group))
+        first_np = np.asarray(first_tok)
+
+        finished: List[RequestOutput] = []
+        t_first = time.perf_counter()
+        for i, ss in enumerate(group):
+            st = _SlotState(ss.request, now)
+            st.first_token_time = t_first
+            st.tokens.append(int(first_np[i]))
+            self._slots[ss.slot] = st
+            sp = ss.request.sampling
+            self._positions[ss.slot] = ss.request.prompt.size
+            self._cur_tok[ss.slot] = first_np[i]
+            self._temps[ss.slot] = sp.temperature
+            self._topks[ss.slot] = sp.top_k
+            self._seeds[ss.slot] = sp.seed
+            done = self._finish_reason(ss.slot)
+            if done:
+                finished.append(self._complete(ss.slot, done))
+        return finished
+
+    # -- decode ------------------------------------------------------------
+
+    def _decode_active(self) -> List[RequestOutput]:
+        next_tok, self._cache = self._decode_step(
+            self.params, self._cache, jnp.asarray(self._cur_tok),
+            jnp.asarray(self._positions), jnp.asarray(self._temps),
+            jnp.asarray(self._topks), jnp.asarray(self._seeds))
+        self.n_decode_steps += 1
+        next_np = np.asarray(next_tok)
+        finished: List[RequestOutput] = []
+        for slot in list(self._slots):
+            st = self._slots[slot]
+            st.tokens.append(int(next_np[slot]))
+            self._positions[slot] += 1
+            self._cur_tok[slot] = next_np[slot]
+            done = self._finish_reason(slot)
+            if done:
+                finished.append(self._complete(slot, done))
+        return finished
+
+    def _finish_reason(self, slot: int) -> Optional[str]:
+        st = self._slots[slot]
+        sp = st.req.sampling
+        if sp.stop_token >= 0 and st.tokens[-1] == sp.stop_token:
+            return "stop"
+        if len(st.tokens) >= sp.max_new_tokens:
+            return "length"
+        if self._positions[slot] >= self.ec.max_len:
+            return "evicted"       # cache region exhausted mid-decode
+        return None
+
+    def _complete(self, slot: int, reason: str) -> RequestOutput:
+        st = self._slots.pop(slot)
+        self.scheduler.complete(slot, evicted=(reason == "evicted"))
+        self._positions[slot] = 0
+        self._cur_tok[slot] = 0
+        self._temps[slot] = 0.0
+        self._topks[slot] = 0
+        self._seeds[slot] = 0
+        now = time.perf_counter()
+        arrive = st.req.arrival_time or st.admit_time
+        return RequestOutput(
+            uid=st.req.uid, prompt=st.req.prompt, token_ids=st.tokens,
+            finish_reason=reason,
+            ttft_s=(st.first_token_time or now) - arrive,
+            latency_s=now - arrive)
+
+    # -- main loop ---------------------------------------------------------
+
+    def step(self) -> List[RequestOutput]:
+        """One engine iteration: admit every admissible prefill group, then
+        advance all active slots one decode step."""
+        finished: List[RequestOutput] = []
+        while True:
+            group = self.scheduler.schedule()
+            if not group:
+                break
+            finished.extend(self._admit(group))
+        if self._slots:
+            finished.extend(self._decode_active())
+        return finished
+
+    def generate(self, requests: Sequence[Request]) -> List[RequestOutput]:
+        """Closed-set convenience: run a request list to completion."""
+        for r in requests:
+            self.submit(r)
+        out: List[RequestOutput] = []
+        while self.has_work:
+            out.extend(self.step())
+        return sorted(out, key=lambda o: o.uid)

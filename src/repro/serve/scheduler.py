@@ -1,0 +1,156 @@
+"""Request scheduler for the continuous-batching engine (DESIGN.md Sec. 6).
+
+Pure host-side bookkeeping — no jax. The engine owns the device state
+(slot KV cache, jitted steps); the scheduler decides *which* request goes
+*where* and keeps the shapes the engine compiles against fixed:
+
+  * a FCFS waiting queue of submitted requests,
+  * a fixed pool of decode slots (free-list, lowest id first so the same
+    traffic pattern replays deterministically),
+  * bucketed admission: each scheduling round drains up to
+    ``prefill_batch`` waiting requests whose prompts fit the same padded
+    length bucket (next power of two >= prompt length, floor
+    ``min_bucket``), so one batched prefill serves the whole group and the
+    number of distinct compiled prefill shapes stays
+    O(log(max_len) * prefill_batch).
+
+Eviction: the engine calls ``complete(slot, ...)`` both for finished
+sequences and for sequences evicted mid-decode (cache region exhausted);
+the slot returns to the free list and the next ``schedule()`` round can
+re-admit a waiting request into it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling controls (fixed-shape: traced as arrays)."""
+    temperature: float = 0.0     # 0 => greedy
+    top_k: int = 0               # 0 => full distribution
+    max_new_tokens: int = 32
+    stop_token: int = -1         # -1 => never stop on a token id
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray                    # (S0,) int32 token ids
+    sampling: SamplingParams = SamplingParams()
+    arrival_time: float = 0.0
+
+    def __post_init__(self):
+        self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
+        if self.prompt.size == 0:
+            raise ValueError(f"request {self.uid}: empty prompt")
+
+
+@dataclasses.dataclass
+class ScheduledSeq:
+    """An admission decision: request -> slot, padded to a bucket."""
+    request: Request
+    slot: int
+    bucket: int                           # padded prompt length
+
+
+def bucket_len(n: int, min_bucket: int = 16) -> int:
+    """Next power of two >= n, floored at min_bucket."""
+    b = min_bucket
+    while b < n:
+        b *= 2
+    return b
+
+
+class Scheduler:
+    """FCFS admission over a fixed slot pool with bucketed prefill groups."""
+
+    def __init__(self, max_slots: int, prefill_batch: int = 4,
+                 min_bucket: int = 16, max_len: int = 2048):
+        if max_slots < 1:
+            raise ValueError("max_slots must be >= 1")
+        self.max_slots = max_slots
+        self.prefill_batch = max(1, prefill_batch)
+        self.min_bucket = min_bucket
+        self.max_len = max_len
+        self._waiting: Deque[Request] = deque()
+        self._free: List[int] = list(range(max_slots))
+        self._running: Dict[int, Request] = {}       # slot -> request
+        # counters for the perf report
+        self.n_submitted = 0
+        self.n_completed = 0
+        self.n_evicted = 0
+
+    # -- queue side --------------------------------------------------------
+
+    def submit(self, request: Request) -> None:
+        if request.prompt.size >= self.max_len:
+            raise ValueError(
+                f"request {request.uid}: prompt len {request.prompt.size} "
+                f">= max_len {self.max_len} leaves no room to decode")
+        self._waiting.append(request)
+        self.n_submitted += 1
+
+    @property
+    def n_waiting(self) -> int:
+        return len(self._waiting)
+
+    @property
+    def n_running(self) -> int:
+        return len(self._running)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self._waiting or self._running)
+
+    def running(self) -> Dict[int, Request]:
+        return dict(self._running)
+
+    # -- admission ---------------------------------------------------------
+
+    def schedule(self) -> List[ScheduledSeq]:
+        """Admit up to min(free slots, prefill_batch) requests that share
+        one padded-length bucket; FCFS, the head of the queue pins the
+        bucket for the round.  Returns [] when nothing is admissible."""
+        if not self._waiting or not self._free:
+            return []
+
+        def _bucket(req: Request) -> int:
+            # clamp: a bucket never exceeds the per-slot cache region
+            return min(bucket_len(req.prompt.size, self.min_bucket),
+                       self.max_len)
+
+        head_bucket = _bucket(self._waiting[0])
+        group: List[ScheduledSeq] = []
+        kept: Deque[Request] = deque()
+        while self._waiting and self._free and \
+                len(group) < self.prefill_batch:
+            req = self._waiting.popleft()
+            if _bucket(req) != head_bucket:
+                kept.append(req)
+                continue
+            slot = self._free.pop(0)
+            self._running[slot] = req
+            group.append(ScheduledSeq(req, slot, head_bucket))
+        self._waiting = kept + self._waiting   # preserve FCFS order
+        return group
+
+    # -- completion / eviction --------------------------------------------
+
+    def complete(self, slot: int, evicted: bool = False) -> Request:
+        """Release a slot (finished or evicted sequence); slot is reusable
+        from the next schedule() round."""
+        if slot not in self._running:
+            raise KeyError(f"slot {slot} is not running")
+        req = self._running.pop(slot)
+        self._free.append(slot)
+        self._free.sort()
+        self.n_completed += 1
+        self.n_evicted += int(evicted)
+        return req

@@ -1,0 +1,196 @@
+"""Continuous-batching engine: scheduler unit tests, greedy parity with the
+legacy serve.generate path (w_bits 4 and 16), and an overlapping-stream
+integration test (admission / eviction / slot reuse under load)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import base as cb
+from repro.models import model
+from repro.serve import serve as serve_lib
+from repro.serve.engine import Engine, EngineConfig, Request, SamplingParams
+from repro.serve.scheduler import Scheduler, bucket_len
+
+
+def _req(uid, n, vocab=256, seed=None, **kw):
+    rng = np.random.default_rng(uid if seed is None else seed)
+    return Request(uid=uid, prompt=rng.integers(0, vocab, n).astype(np.int32),
+                   sampling=SamplingParams(**kw))
+
+
+# ---------------------------------------------------------------------------
+# Scheduler
+# ---------------------------------------------------------------------------
+
+class TestScheduler:
+    def test_bucket_len(self):
+        assert bucket_len(1) == 16
+        assert bucket_len(16) == 16
+        assert bucket_len(17) == 32
+        assert bucket_len(100) == 128
+
+    def test_fcfs_admission_respects_slots_and_batch(self):
+        s = Scheduler(max_slots=3, prefill_batch=2, max_len=64)
+        for i in range(5):
+            s.submit(_req(i, 8))
+        g1 = s.schedule()
+        assert [x.request.uid for x in g1] == [0, 1]       # prefill_batch cap
+        assert [x.slot for x in g1] == [0, 1]
+        g2 = s.schedule()
+        assert [x.request.uid for x in g2] == [2]          # one slot left
+        assert s.schedule() == []                          # no free slots
+        assert s.n_waiting == 2 and s.n_running == 3
+
+    def test_completion_frees_slot_for_reuse(self):
+        s = Scheduler(max_slots=1, prefill_batch=1, max_len=64)
+        for i in range(3):
+            s.submit(_req(i, 4))
+        (a,) = s.schedule()
+        assert (a.request.uid, a.slot) == (0, 0)
+        s.complete(0)
+        (b,) = s.schedule()
+        assert (b.request.uid, b.slot) == (1, 0)           # same slot reused
+        s.complete(0, evicted=True)
+        (c,) = s.schedule()
+        assert (c.request.uid, c.slot) == (2, 0)
+        assert s.n_completed == 2 and s.n_evicted == 1
+
+    def test_bucket_grouping_preserves_fcfs(self):
+        s = Scheduler(max_slots=4, prefill_batch=4, min_bucket=8, max_len=64)
+        s.submit(_req(0, 5))    # bucket 8
+        s.submit(_req(1, 20))   # bucket 32
+        s.submit(_req(2, 7))    # bucket 8
+        g1 = s.schedule()       # head pins bucket 8; uid 1 skipped
+        assert [x.request.uid for x in g1] == [0, 2]
+        assert all(x.bucket == 8 for x in g1)
+        g2 = s.schedule()
+        assert [x.request.uid for x in g2] == [1]
+        assert g2[0].bucket == 32
+
+    def test_bucket_clamped_to_max_len(self):
+        s = Scheduler(max_slots=1, prefill_batch=1, min_bucket=8, max_len=24)
+        s.submit(_req(0, 20))   # bucket_len(20)=32 > max_len
+        (a,) = s.schedule()
+        assert a.bucket == 24
+
+    def test_rejects_prompt_at_cache_capacity(self):
+        s = Scheduler(max_slots=1, max_len=16)
+        with pytest.raises(ValueError):
+            s.submit(_req(0, 16))
+
+
+# ---------------------------------------------------------------------------
+# Engine vs legacy serve.generate (greedy parity)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("w_bits", [16, 4])
+def test_engine_matches_generate_greedy(w_bits, rng, cpu_opts):
+    """Batched-prefill slot decode must reproduce the per-token legacy
+    path exactly under greedy sampling, dense fp32 and W4-quantized."""
+    cfg = cb.get_smoke("granite_3_8b")
+    params = model.init(rng, cfg)
+    sc = serve_lib.ServeConfig(w_bits=w_bits)
+    params = serve_lib.prepare_params(params, sc)
+    B, S0, n_new = 4, 12, 8
+    toks = jax.random.randint(jax.random.PRNGKey(5), (B, S0), 0, cfg.vocab)
+    ref = np.asarray(serve_lib.generate(params, cfg, cpu_opts, sc, toks,
+                                        n_new))
+    reqs = [Request(uid=i, prompt=np.asarray(toks[i]),
+                    sampling=SamplingParams(max_new_tokens=n_new))
+            for i in range(B)]
+    eng = Engine(params, cfg, cpu_opts,
+                 EngineConfig(max_slots=B, max_len=S0 + n_new + 4,
+                              prefill_batch=B, min_bucket=8))
+    outs = eng.generate(reqs)
+    got = np.stack([o.token_ids for o in outs])
+    assert got.shape == ref.shape
+    np.testing.assert_array_equal(got, ref)
+
+
+def test_engine_moe_family(rng, cpu_opts):
+    """Slot cache + batched prefill also serves the MoE family."""
+    import dataclasses
+    cfg = dataclasses.replace(cb.get_smoke("kimi_k2_1t_a32b"),
+                              capacity_factor=64.0)
+    params = model.init(rng, cfg)
+    eng = Engine(params, cfg, cpu_opts,
+                 EngineConfig(max_slots=2, max_len=32, prefill_batch=2,
+                              min_bucket=8))
+    outs = eng.generate([_req(i, 6, vocab=cfg.vocab, max_new_tokens=4)
+                         for i in range(2)])
+    assert [len(o.token_ids) for o in outs] == [4, 4]
+
+
+def test_engine_rejects_unsupported_family(rng, cpu_opts):
+    cfg = cb.get_smoke("mamba2_1_3b")
+    params = model.init(rng, cfg)
+    with pytest.raises(ValueError):
+        Engine(params, cfg, cpu_opts, EngineConfig(max_slots=2, max_len=32))
+
+
+# ---------------------------------------------------------------------------
+# Continuous batching under load
+# ---------------------------------------------------------------------------
+
+def test_engine_overlapping_stream(rng, cpu_opts):
+    """More requests than slots, mixed lengths and sampling params: all
+    finish, slots are reused, outputs are independent of co-tenants."""
+    cfg = cb.get_smoke("granite_3_8b")
+    params = model.init(rng, cfg)
+    ec = EngineConfig(max_slots=3, max_len=48, prefill_batch=2, min_bucket=8)
+    eng = Engine(params, cfg, cpu_opts, ec)
+    reqs = [_req(i, 4 + (3 * i) % 11, vocab=cfg.vocab,
+                 max_new_tokens=3 + i % 5,
+                 temperature=0.0 if i % 2 == 0 else 0.8, seed=i)
+            for i in range(9)]
+    outs = eng.generate(reqs)
+    assert len(outs) == 9
+    assert eng.scheduler.n_completed == 9
+    for r, o in zip(reqs, outs):
+        assert o.uid == r.uid
+        assert len(o.token_ids) == r.sampling.max_new_tokens
+        assert o.finish_reason == "length"
+        assert o.ttft_s >= 0.0 and o.latency_s >= o.ttft_s
+    # slots were reused: 9 requests through 3 slots
+    assert eng.scheduler.max_slots == 3
+
+    # greedy requests must match a solo run (co-tenants don't leak state)
+    solo = Engine(params, cfg, cpu_opts, ec)
+    solo_out = solo.generate([reqs[0]])[0]
+    assert solo_out.token_ids == outs[0].token_ids
+
+
+def test_engine_eviction_on_cache_exhaustion(rng, cpu_opts):
+    """A sequence that outgrows its slot region is evicted mid-decode and
+    the slot is handed to a waiting request."""
+    cfg = cb.get_smoke("granite_3_8b")
+    params = model.init(rng, cfg)
+    ec = EngineConfig(max_slots=1, max_len=16, prefill_batch=1, min_bucket=8)
+    eng = Engine(params, cfg, cpu_opts, ec)
+    long_req = _req(0, 8, vocab=cfg.vocab, max_new_tokens=100)
+    short_req = _req(1, 4, vocab=cfg.vocab, max_new_tokens=2)
+    outs = eng.generate([long_req, short_req])
+    assert outs[0].finish_reason == "evicted"
+    # region fills after max_len - S0 decode writes; the final sampled
+    # token needs no KV write, so max_len - S0 + 1 tokens come out
+    assert len(outs[0].token_ids) == ec.max_len - 8 + 1
+    assert outs[1].finish_reason == "length"
+    assert eng.scheduler.n_evicted == 1
+
+
+def test_engine_stop_token(rng, cpu_opts):
+    """Per-request stop token terminates generation early."""
+    cfg = cb.get_smoke("granite_3_8b")
+    params = model.init(rng, cfg)
+    ec = EngineConfig(max_slots=2, max_len=32, prefill_batch=2, min_bucket=8)
+    eng = Engine(params, cfg, cpu_opts, ec)
+    base = eng.generate([_req(0, 6, vocab=cfg.vocab, max_new_tokens=8)])[0]
+    stop = base.token_ids[2]                  # third greedy token...
+    first = base.token_ids.index(stop)        # ...which may repeat earlier
+    eng2 = Engine(params, cfg, cpu_opts, ec)
+    out = eng2.generate([_req(0, 6, vocab=cfg.vocab, max_new_tokens=8,
+                              stop_token=int(stop))])[0]
+    assert out.finish_reason == "stop"
+    assert out.token_ids == base.token_ids[:first + 1]

@@ -4,7 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (see requirements.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (GaussianModel, EmpiricalModel, fakequant,
                         kquantile_dequantize, kquantile_quantize,

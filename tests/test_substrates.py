@@ -239,17 +239,15 @@ class TestCompressedCollectives:
         import jax
         import jax.numpy as jnp
         import numpy as np
-        from jax.sharding import PartitionSpec as P
-        from repro.parallel.collectives import compressed_pmean
-        mesh = jax.make_mesh((1,), ("pod",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from jax.sharding import Mesh, PartitionSpec as P
+        from repro.parallel.collectives import compressed_pmean, pod_shard_map
+        mesh = Mesh(np.array(jax.devices()[:1]), ("pod",))
         g = {"w": jax.random.normal(jax.random.PRNGKey(0), (64, 32)) * 0.01,
              "b": jnp.array(0.5)}
 
-        out = jax.shard_map(
+        out = pod_shard_map(
             lambda t: compressed_pmean(t, "pod", 8),
-            mesh=mesh, axis_names={"pod"}, in_specs=P(), out_specs=P(),
-            check_vma=False)(g)
+            mesh, in_specs=P(), out_specs=P())(g)
         # absmax int8: absolute error bounded by amax/127 (tensor scale)
         err = np.abs(np.asarray(out["w"]) - np.asarray(g["w"]))
         amax = np.abs(np.asarray(g["w"])).max()
