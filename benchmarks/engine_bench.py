@@ -5,6 +5,13 @@ and reports offline throughput (all requests queued at t=0) plus the
 legacy per-token serve.generate baseline — the numbers behind the
 EXPERIMENTS.md "Perf" engine table.
 
+The headline comparison is **slot vs paged KV at equal HBM**: the slot
+cache reserves ``max_len`` rows per slot, so its concurrency is
+``max_slots`` regardless of how short requests are; the paged cache
+spends the same pool of page rows on whatever is actually running, so at
+equal KV bytes it admits more concurrent sequences (and never loses one
+— preempt/resume replaces terminal eviction).
+
     PYTHONPATH=src python -m benchmarks.engine_bench [--arch granite_3_8b]
 
 Prints ``name,us_per_call,derived`` CSV rows (harness convention); derived
@@ -30,6 +37,11 @@ PROMPT_LEN = 12
 NEW_TOKENS = 16
 N_REQUESTS = 16
 
+# equal-HBM A/B: both caches hold 8 * 64 = 512 KV rows (+1 sink page).
+SLOT_EC = dict(max_slots=8, max_len=64, prefill_batch=4, cache_mode="slot")
+PAGED_EC = dict(max_slots=16, max_len=64, prefill_batch=4,
+                cache_mode="paged", page_size=8, total_pages=65)
+
 
 def _requests(vocab, n=N_REQUESTS):
     rng = np.random.default_rng(0)
@@ -39,17 +51,24 @@ def _requests(vocab, n=N_REQUESTS):
             for i in range(n)]
 
 
-def bench_engine(params, cfg, opts, max_slots):
-    ec = EngineConfig(max_slots=max_slots, max_len=64, prefill_batch=4)
+def bench_engine(params, cfg, opts, ec: EngineConfig):
     eng = Engine(params, cfg, opts, ec)
     eng.generate(_requests(cfg.vocab, 2))  # warm this instance's jit caches
     eng.reset_stats()
     reqs = _requests(cfg.vocab)
+    peak = 0
+    for r in reqs:
+        eng.submit(r)
+    outs = []
     t0 = time.perf_counter()
-    outs = eng.generate(reqs)
+    while eng.has_work:
+        outs.extend(eng.step())
+        peak = max(peak, eng.scheduler.n_running)
     dt = time.perf_counter() - t0
     toks = sum(len(o.token_ids) for o in outs)
-    return dt, toks / dt
+    assert not any(o.finish_reason == "evicted" for o in outs) \
+        or ec.cache_mode == "slot"
+    return dt, toks / dt, peak
 
 
 def bench_legacy(params, cfg, opts, sc, batch=4):
@@ -78,9 +97,21 @@ def run(arch="granite_3_8b"):
         dt, tps = bench_legacy(params, cfg, opts, sc)
         yield (f"serve_generate_w{w_bits}_b4", 1e6 / tps, round(tps, 1))
         for slots in (1, 4, 8):
-            dt, tps = bench_engine(params, cfg, opts, slots)
+            ec = EngineConfig(max_slots=slots, max_len=64, prefill_batch=4,
+                              cache_mode="paged", page_size=8)
+            dt, tps, _ = bench_engine(params, cfg, opts, ec)
             yield (f"engine_w{w_bits}_slots{slots}", 1e6 / tps,
                    round(tps, 1))
+        # equal-HBM A/B: 512 cache rows either as 8 fixed slot regions or
+        # as 64 shared pages feeding up to 16 slots
+        dt, tps, peak = bench_engine(params, cfg, opts,
+                                     EngineConfig(**SLOT_EC))
+        yield (f"engine_w{w_bits}_slotcache_eqhbm_conc{peak}", 1e6 / tps,
+               round(tps, 1))
+        dt, tps, peak = bench_engine(params, cfg, opts,
+                                     EngineConfig(**PAGED_EC))
+        yield (f"engine_w{w_bits}_pagedcache_eqhbm_conc{peak}", 1e6 / tps,
+               round(tps, 1))
 
 
 def main():

@@ -16,10 +16,15 @@ Array = jax.Array
 
 
 def pack_int4(codes: Array) -> Array:
-    """(..., 2n) int codes in [0,16) -> (..., n) uint8 packed."""
+    """(..., 2n) int codes in [0,16) -> (..., n) uint8 packed.
+
+    Codes are masked to their low nibble: without the mask, bit 4 of an
+    out-of-range even element would bleed into its odd neighbor's nibble
+    and silently corrupt it.
+    """
     if codes.shape[-1] % 2 != 0:
         raise ValueError(f"last dim must be even, got {codes.shape}")
-    c = codes.astype(jnp.uint8)
+    c = codes.astype(jnp.uint8) & 0x0F
     lo = c[..., 0::2]
     hi = c[..., 1::2]
     return (lo | (hi << 4)).astype(jnp.uint8)

@@ -69,6 +69,21 @@ def _stats_axes(w: Array, per_channel: bool, stacked: bool):
     return None
 
 
+def _fit_dist(w: Array, cfg: UniqConfig, stacked: bool):
+    """Distribution model for the kquantile path, honoring ``cfg.dist``.
+
+    Non-Gaussian dists apply per-tensor only (the sorted-sample ECDF has
+    no per-channel form); per-channel / scan-stacked statistics stay
+    Gaussian, the paper's model.
+    """
+    axes = _stats_axes(w, cfg.per_channel, stacked)
+    if cfg.dist != "gaussian" and axes is None:
+        return fit_model(w, cfg.dist)      # validates the kind
+    if cfg.dist not in ("gaussian", "empirical"):
+        raise ValueError(f"unknown distribution model: {cfg.dist!r}")
+    return fit_gaussian(w, axes)
+
+
 def fit_gaussian(w: Array, axes_keep) -> GaussianModel:
     """GaussianModel with statistics reduced over all axes not in axes_keep."""
     if axes_keep is None:
@@ -100,7 +115,7 @@ def transform_param(w: Array, rng: Array, mode: Array, cfg: UniqConfig,
         return jnp.where(mode_b == CLEAN, w,
                          jnp.where(mode_b == NOISE, noisy, frozen))
 
-    model = fit_gaussian(w, _stats_axes(w, cfg.per_channel, stacked))
+    model = _fit_dist(w, cfg, stacked)
     u = model.cdf(w)
     e = uniform_noise(rng, w.shape, k, dtype=u.dtype)
     u_noise = jnp.clip(u + e, 1e-6, 1.0 - 1e-6)
@@ -218,6 +233,16 @@ class GradualSchedule:
     n_blocks: int
     total_steps: int
     iterations: int = 2
+
+    def __post_init__(self):
+        if self.n_layers < 1:
+            raise ValueError(f"n_layers must be >= 1, got {self.n_layers}")
+        if self.n_blocks < 1:
+            raise ValueError(f"n_blocks must be >= 1, got {self.n_blocks}")
+        # n_blocks > n_layers would leave blocks with no layer: their stages
+        # run with zero NOISE layers and silently burn step budget.
+        if self.n_blocks > self.n_layers:
+            object.__setattr__(self, "n_blocks", self.n_layers)
 
     @property
     def n_stages(self) -> int:

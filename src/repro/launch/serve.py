@@ -6,11 +6,19 @@ Closed-batch smoke (legacy path):
         --smoke --w-bits 4 --batch 4 --prompt-len 16 --new-tokens 32
 
 Continuous-batching engine under a synthetic Poisson request stream
-(reports tokens/s, time-to-first-token, slot occupancy):
+(reports tokens/s, time-to-first-token, slot occupancy, preemptions and
+effective KV utilization):
 
     PYTHONPATH=src python -m repro.launch.serve --arch granite_3_8b \
         --smoke --engine --w-bits 4 --requests 16 --rate 8 \
-        --max-slots 8 --new-tokens 32
+        --max-slots 8 --new-tokens 32 --page-size 64
+
+The KV cache is paged by default (--cache-mode paged): sequences grow
+page by page out of a shared pool (--total-pages; default sizes the pool
+to the slot-cache HBM) and are preempted+resumed instead of evicted when
+it runs dry.  --cache-mode slot keeps the legacy fixed-region cache for
+A/B comparison; --total-pages small enough forces preemption
+(--min-preemptions asserts it happened, for CI smoke).
 
 Loads (or random-inits) weights, k-quantile-quantizes them to --w-bits,
 and serves synthetic prompts; the closed-batch path also reports greedy
@@ -58,7 +66,9 @@ def run_engine_stream(params, cfg, opts, args) -> dict:
             for i in range(n)]
 
     ec = EngineConfig(max_slots=args.max_slots, max_len=args.max_len,
-                      prefill_batch=args.prefill_batch)
+                      prefill_batch=args.prefill_batch,
+                      cache_mode=args.cache_mode, page_size=args.page_size,
+                      total_pages=args.total_pages)
     eng = Engine(params, cfg, opts, ec)
 
     # warm THIS engine's jitted steps (jit caches live on the instance):
@@ -97,7 +107,8 @@ def run_engine_stream(params, cfg, opts, args) -> dict:
     stats = {
         "requests": len(outs),
         "new_tokens": new_tokens,
-        "prompt_tokens": eng.n_prefill_tokens,
+        "prompt_tokens": eng.n_prompt_tokens,
+        "prefill_tokens": eng.n_prefill_tokens,  # > prompt on resumes
         "wall_s": wall,
         "tok_per_s": new_tokens / max(wall, 1e-9),
         "ttft_mean_s": float(np.mean(ttfts)) if ttfts else 0.0,
@@ -108,6 +119,8 @@ def run_engine_stream(params, cfg, opts, args) -> dict:
         "prefill_calls": eng.n_prefill_calls,
         "mean_occupancy": float(np.mean(occupancy)) if occupancy else 0.0,
         "evicted": eng.scheduler.n_evicted,
+        "preemptions": eng.n_preemptions,
+        "kv_utilization": eng.kv_utilization,
     }
     print(f"[engine] {stats['requests']} requests "
           f"({stats['prompt_tokens']} prompt + {new_tokens} new tokens) "
@@ -120,6 +133,24 @@ def run_engine_stream(params, cfg, opts, args) -> dict:
           f"{stats['prefill_calls']} prefill calls, mean occupancy "
           f"{stats['mean_occupancy']:.2f}/{args.max_slots} slots, "
           f"{stats['evicted']} evicted")
+    if args.cache_mode == "paged":
+        print(f"[engine] paged KV: {stats['preemptions']} preemptions, "
+              f"effective utilization "
+              f"{stats['kv_utilization'] * 100:.1f}% of held page rows")
+        resumed = [o for o in outs if o.n_preempts > 0]
+        if resumed:
+            print(f"[engine] {len(resumed)} requests survived "
+                  f"preempt/resume and completed")
+        assert not any(o.finish_reason == "evicted" for o in outs), \
+            "paged mode must never evict terminally"
+    if args.min_preemptions and stats["preemptions"] < args.min_preemptions:
+        raise SystemExit(
+            f"expected >= {args.min_preemptions} preemptions, saw "
+            f"{stats['preemptions']} — scheduler preempt path not exercised")
+    if stats["requests"] != eng.scheduler.n_submitted:
+        raise SystemExit(
+            f"lost requests: {eng.scheduler.n_submitted} submitted, "
+            f"{stats['requests']} completed")
     return stats
 
 
@@ -163,9 +194,20 @@ def main(argv=None):
     p.add_argument("--rate", type=float, default=8.0,
                    help="Poisson arrival rate (requests/s)")
     p.add_argument("--max-slots", type=int, default=8)
-    p.add_argument("--max-len", type=int, default=256)
+    p.add_argument("--max-len", type=int, default=256,
+                   help="per-sequence KV capacity (prompt + generation)")
     p.add_argument("--prefill-batch", type=int, default=4)
     p.add_argument("--temperature", type=float, default=0.0)
+    p.add_argument("--cache-mode", choices=("paged", "slot"),
+                   default="paged")
+    p.add_argument("--page-size", type=int, default=64,
+                   help="KV page size in tokens (paged mode)")
+    p.add_argument("--total-pages", type=int, default=None,
+                   help="KV pool size; default = slot-cache-equivalent "
+                        "HBM; smaller values force preemption/resume")
+    p.add_argument("--min-preemptions", type=int, default=0,
+                   help="fail unless at least this many preemptions "
+                        "happened (CI smoke of the preempt/resume path)")
     args = p.parse_args(argv)
 
     cfg = cb.get_smoke(args.arch) if args.smoke else cb.get(args.arch)

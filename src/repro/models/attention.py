@@ -124,6 +124,34 @@ def chunked_attention(q: Array, k: Array, v: Array, q_pos: Array,
     return out.reshape(B, Sq, H, D).astype(q.dtype)
 
 
+def paged_decode_attention(q: Array, k_pages: Array, v_pages: Array,
+                           block_tables: Array, q_pos: Array,
+                           p: AttnParams) -> Array:
+    """Decode attention against a paged KV pool.
+
+    q            : (B, 1, H, D) current-position queries.
+    k/v_pages    : (P, page, KV, D) device-resident page pool (all slots
+                   share it; a sequence's KV lives in the pages its block
+                   table names, page j covering positions
+                   [j*page, (j+1)*page)).
+    block_tables : (B, n_pages) int32 page ids per sequence; entries past
+                   the allocated prefix point at the reserved sink page 0
+                   and are masked out by position below.
+    q_pos        : (B,) current positions.
+
+    The gathered view is position-contiguous by construction, so the
+    plain masked ``decode_attention`` applies unchanged: keys at
+    positions > q_pos (never-written or sink rows) are masked to -inf
+    exactly as out-of-prefix rows are in the slot cache.
+    """
+    B = q.shape[0]
+    _, page, KV, D = k_pages.shape
+    n_pages = block_tables.shape[1]
+    k = k_pages[block_tables].reshape(B, n_pages * page, KV, D)
+    v = v_pages[block_tables].reshape(B, n_pages * page, KV, D)
+    return decode_attention(q, k, v, q_pos, p)
+
+
 def decode_attention(q: Array, k_cache: Array, v_cache: Array,
                      q_pos: Array, p: AttnParams,
                      cache_len: Optional[Array] = None) -> Array:

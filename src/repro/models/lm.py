@@ -600,9 +600,57 @@ def cache_specs(cfg: ArchConfig, batch: int, max_len: int,
             "v": jax.ShapeDtypeStruct(shape, dtype)}
 
 
+def init_paged_cache(cfg: ArchConfig, total_pages: int, page_size: int,
+                     dtype=jnp.bfloat16):
+    """Zeroed paged KV pool (L, total_pages, page_size, KV, hd).
+
+    Page 0 is the reserved *sink*: never allocated to a sequence, it
+    absorbs the writes of inactive decode rows and prefill right-padding
+    (block-table entries default to 0), so scatters never need a mask.
+    """
+    shape = (cfg.n_layers, total_pages, page_size, cfg.n_kv_heads,
+             cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def cache_insert_paged(cache, prefill_cache, page_tables):
+    """Scatter a prefill KV block into the paged pool.
+
+    cache         : {"k","v"} (L, total_pages, page_size, KV, hd)
+    prefill_cache : {"k","v"} (L, G, S_pad, KV, hd) from a padded batched
+                    prefill of G admitted prompts
+    page_tables   : (G, n_pages) int32 destination page ids covering
+                    [0, n_pages * page_size); entries past a prompt's
+                    allocated pages (and whole pad rows) are 0 (sink).
+
+    Rows past a prompt's true length hold right-padding garbage but land
+    either in the sink page or in the tail of the sequence's last page,
+    where decode's write-before-read (position t overwritten before the
+    mask ``k_pos <= t`` exposes it) keeps them invisible — the same
+    argument as the slot cache's padded insert.
+    """
+    page = cache["k"].shape[2]
+    L, G, s_pad = prefill_cache["k"].shape[:3]
+    n_pages = page_tables.shape[1]
+    pad = n_pages * page - s_pad
+    page_tables = jnp.asarray(page_tables, jnp.int32)
+
+    def scatter(pool, kv):
+        kv = jnp.pad(kv, [(0, 0), (0, 0), (0, pad), (0, 0), (0, 0)])
+        kv = kv.reshape(L, G, n_pages, page, *kv.shape[3:])
+        return pool.at[:, page_tables].set(kv.astype(pool.dtype))
+
+    return {"k": scatter(cache["k"], prefill_cache["k"]),
+            "v": scatter(cache["v"], prefill_cache["v"])}
+
+
 def decode_step(params, cfg: ArchConfig, opts: ModelOpts, cache, tokens,
-                positions):
+                positions, block_tables=None):
     """One decode step.  tokens (B, 1); positions (B,) current index.
+
+    cache: slot layout {"k","v"} (L, B, S, KV, hd) when ``block_tables``
+    is None; paged layout (L, total_pages, page_size, KV, hd) with
+    ``block_tables`` (B, n_pages) int32 page indirection otherwise.
 
     Returns (logits (B, V), updated cache).
     """
@@ -612,6 +660,12 @@ def decode_step(params, cfg: ArchConfig, opts: ModelOpts, cache, tokens,
     pos2d = positions[:, None]
     windows = _window_schedule(cfg)
     barange = jnp.arange(B)
+    paged = block_tables is not None
+    if paged:
+        page = cache["k"].shape[2]
+        write_page = jnp.take_along_axis(
+            block_tables, (positions // page)[:, None], axis=1)[:, 0]
+        write_row = positions % page
 
     def body(h, inp):
         lp, window, k_cache, v_cache = inp
@@ -621,11 +675,21 @@ def decode_step(params, cfg: ArchConfig, opts: ModelOpts, cache, tokens,
         v = mm(hn, lp["wv"]).reshape(B, 1, KV, hd)
         q = apply_rope(q, pos2d, cfg.rope_theta)
         k = apply_rope(k, pos2d, cfg.rope_theta)
-        k_cache = k_cache.at[barange, positions].set(k[:, 0].astype(k_cache.dtype))
-        v_cache = v_cache.at[barange, positions].set(v[:, 0].astype(v_cache.dtype))
         p = attn.AttnParams(window=window, logit_cap=cfg.attn_logit_cap,
                             causal=True)
-        o = attn.decode_attention(q, k_cache, v_cache, positions, p)
+        if paged:
+            k_cache = k_cache.at[write_page, write_row].set(
+                k[:, 0].astype(k_cache.dtype))
+            v_cache = v_cache.at[write_page, write_row].set(
+                v[:, 0].astype(v_cache.dtype))
+            o = attn.paged_decode_attention(q, k_cache, v_cache,
+                                            block_tables, positions, p)
+        else:
+            k_cache = k_cache.at[barange, positions].set(
+                k[:, 0].astype(k_cache.dtype))
+            v_cache = v_cache.at[barange, positions].set(
+                v[:, 0].astype(v_cache.dtype))
+            o = attn.decode_attention(q, k_cache, v_cache, positions, p)
         o = mm(o.reshape(B, 1, H * hd), lp["wo"])
         if cfg.post_norms:
             o = _norm(o, lp["post_attn_norm"], cfg)

@@ -21,7 +21,9 @@ from repro.models.lm import ModelOpts
 
 __all__ = ["ModelOpts", "init", "loss_fn", "prefill", "decode",
            "cache_specs", "init_cache", "quantize_for_serving",
-           "supports_slot_cache", "init_slot_cache", "cache_insert"]
+           "supports_slot_cache", "init_slot_cache", "cache_insert",
+           "supports_paged_cache", "init_paged_cache",
+           "cache_insert_paged"]
 
 
 def init(rng: jax.Array, cfg: ArchConfig) -> Any:
@@ -65,7 +67,15 @@ def prefill(params, cfg: ArchConfig, opts: ModelOpts, batch,
 
 
 def decode(params, cfg: ArchConfig, opts: ModelOpts, cache, tokens,
-           positions):
+           positions, block_tables=None):
+    """``block_tables`` (B, n_pages) int32 switches the decoder-only
+    families to the paged-cache layout (see lm.decode_step)."""
+    if block_tables is not None:
+        if not supports_paged_cache(cfg):
+            raise ValueError(
+                f"paged decode unsupported for family {cfg.family}")
+        return lm.decode_step(params, cfg, opts, cache, tokens, positions,
+                              block_tables=block_tables)
     if cfg.family == "audio":
         return encdec.decode_step_encdec(params, cfg, opts, cache, tokens,
                                          positions)
@@ -141,6 +151,27 @@ def cache_insert(cache, prefill_cache, slots):
         "v": cache["v"].at[:, slots, :s_pad].set(
             prefill_cache["v"].astype(cache["v"].dtype)),
     }
+
+
+def supports_paged_cache(cfg: ArchConfig) -> bool:
+    """Paged-cache serving covers the same plain-KV families as the slot
+    cache; the page pool only changes *where* a position's row lives."""
+    return supports_slot_cache(cfg)
+
+
+def init_paged_cache(cfg: ArchConfig, total_pages: int, page_size: int,
+                     dtype=jnp.bfloat16):
+    """Zeroed paged KV pool (L, total_pages, page_size, KV, hd); page 0
+    is the reserved sink (see lm.init_paged_cache)."""
+    if not supports_paged_cache(cfg):
+        raise ValueError(f"paged cache unsupported for family {cfg.family}")
+    return lm.init_paged_cache(cfg, total_pages, page_size, dtype)
+
+
+def cache_insert_paged(cache, prefill_cache, page_tables):
+    """Scatter a batched-prefill KV block into pool pages (see
+    lm.cache_insert_paged)."""
+    return lm.cache_insert_paged(cache, prefill_cache, page_tables)
 
 
 def quantize_for_serving(params, bits: int, per_channel: bool = True):

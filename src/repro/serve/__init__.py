@@ -1,8 +1,9 @@
 """repro.serve — quantized serving.
 
 ``serve``     : prefill/decode steps + closed-batch ``generate`` driver.
-``scheduler`` : FCFS slot scheduler for the continuous-batching engine.
-``engine``    : slot-cache continuous-batching engine (DESIGN.md Sec. 6).
+``scheduler`` : FCFS scheduler (paged KV page allocator with
+                preemption/resume, or legacy slot accounting).
+``engine``    : paged-KV continuous-batching engine (DESIGN.md Sec. 6).
 """
 
 from repro.serve.engine import (Engine, EngineConfig, Request,  # noqa: F401

@@ -5,25 +5,33 @@ batch: every request in the batch must arrive together, finish together,
 and pay a host-loop step per *prompt* token.  This engine serves an open
 request stream instead (DESIGN.md Sec. 6):
 
-  * **slot KV cache** — one device-resident (L, max_slots, max_len, KV, hd)
-    cache; each running sequence owns a slot (a fixed max_len region).
-    Admission writes the slot, completion/eviction frees it — no
-    reallocation, no recompilation.
-  * **batched prefill** — an admitted group runs ONE forward over the whole
-    padded prompt block (``model.prefill`` with per-sequence ``last_idx``),
-    then scatters its KV into the slots via ``model.cache_insert``.  Prompt
-    cost drops from S0 host-loop decode steps to a single jit call.
+  * **paged KV cache** (default) — one device-resident page pool
+    (L, total_pages, page_size, KV, hd); a sequence's KV grows page by
+    page through a per-slot block table (a traced (max_slots, n_pages)
+    int32 array, so growth never recompiles).  Short requests stop
+    paying for ``max_len``-sized reservations, and on pool exhaustion
+    the scheduler *preempts* the lowest-priority sequence (frees its
+    pages, requeues it with its generated tokens) and *resumes* it later
+    by re-prefilling prompt+generated — no request is ever lost
+    mid-decode.  A legacy **slot** mode (fixed max_len region per slot,
+    terminal eviction) is kept as the A/B baseline.
+  * **batched prefill** — an admitted group runs ONE forward over the
+    whole padded prompt block (``model.prefill`` with per-sequence
+    ``last_idx``), then scatters its KV into pool pages
+    (``model.cache_insert_paged``) or slots (``model.cache_insert``).
+    Prompt cost drops from S0 host-loop decode steps to a single jit call.
   * **continuous decode** — one jitted fixed-shape step advances *all*
     active slots each iteration; sequences join and leave mid-stream
-    (admitted into free slots, evicted when their cache region is
-    exhausted) without disturbing the others.
+    without disturbing the others.
   * **per-request sampling** — temperature / top-k / stop conditions are
-    per-slot *arrays* traced into the step, so heterogeneous sampling
-    never forks the compiled graph.
+    per-slot *arrays* traced into the step, and sample keys are folded by
+    (seed, position) — never by slot or batch — so a resumed sequence's
+    sample stream continues exactly where preemption cut it.
 
-Fixed jit shapes: the decode step always sees (max_slots, 1) tokens; the
-prefill sees (prefill_batch, bucket) token blocks, bucket a power of two —
-the compile count is bounded by the bucket count, not the traffic.
+Fixed jit shapes: the decode step always sees (max_slots, 1) tokens (plus
+the block-table array in paged mode); the prefill sees (prefill_batch,
+bucket) token blocks, bucket a power of two — the compile count is
+bounded by the bucket count, not the traffic.
 
 The weights may be k-quantile coded (``model.quantize_for_serving``): both
 prefill and decode then dequantize on the fly through the qmatmul path,
@@ -35,7 +43,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Dict, List, Optional, Sequence
+from typing import List, Optional, Sequence as Seq
 
 import jax
 import jax.numpy as jnp
@@ -45,7 +53,7 @@ from repro.configs.base import ArchConfig
 from repro.models import model
 from repro.models.lm import ModelOpts
 from repro.serve.scheduler import (Request, SamplingParams, ScheduledSeq,
-                                   Scheduler)
+                                   Scheduler, Sequence, pages_for)
 
 __all__ = ["EngineConfig", "Engine", "Request", "SamplingParams",
            "RequestOutput"]
@@ -54,9 +62,15 @@ __all__ = ["EngineConfig", "Engine", "Request", "SamplingParams",
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
     max_slots: int = 8          # concurrent sequences (decode batch)
-    max_len: int = 256          # per-slot KV region (prompt + generation)
+    max_len: int = 256          # per-sequence KV capacity (prompt + gen)
     prefill_batch: int = 4      # prompts prefilled per admission round
     min_bucket: int = 16        # smallest padded prompt length
+    cache_mode: str = "paged"   # "paged" | "slot" (legacy A/B baseline)
+    page_size: int = 64         # KV page size in tokens (paged mode)
+    total_pages: Optional[int] = None
+    # total_pages None => max_slots * ceil(max_len/page_size) + 1: the same
+    # KV HBM as the slot cache plus the reserved sink page, i.e. enough
+    # that preemption only triggers when the pool is deliberately shrunk.
 
 
 @dataclasses.dataclass
@@ -64,9 +78,10 @@ class RequestOutput:
     uid: int
     prompt: np.ndarray
     token_ids: List[int]
-    finish_reason: str          # "stop" | "length" | "evicted"
+    finish_reason: str          # "stop" | "length" | "evicted" (slot mode)
     ttft_s: float               # arrival -> first token (wall clock)
     latency_s: float            # arrival -> completion (wall clock)
+    n_preempts: int = 0         # preempt/resume round-trips survived
 
 
 def _sample_batch(logits: jax.Array, keys: jax.Array, temps: jax.Array,
@@ -88,20 +103,11 @@ def _sample_batch(logits: jax.Array, keys: jax.Array, temps: jax.Array,
 
 def _fold_keys(seeds: jax.Array, positions: jax.Array) -> jax.Array:
     """Deterministic per-(seed, position) keys: a request's sample stream
-    does not depend on which slot or batch it lands in."""
+    does not depend on which slot or batch it lands in — and therefore
+    survives preemption/resume bit-exactly."""
     base = jax.random.PRNGKey(0)
     return jax.vmap(lambda s, p: jax.random.fold_in(
         jax.random.fold_in(base, s), p))(seeds, positions)
-
-
-class _SlotState:
-    """Host-side bookkeeping for one running sequence."""
-
-    def __init__(self, req: Request, admit_time: float):
-        self.req = req
-        self.tokens: List[int] = []
-        self.admit_time = admit_time
-        self.first_token_time: Optional[float] = None
 
 
 class Engine:
@@ -114,31 +120,55 @@ class Engine:
         if not model.supports_slot_cache(cfg):
             raise ValueError(
                 f"engine serves decoder-only KV families; got {cfg.family}")
+        if ec.cache_mode not in ("paged", "slot"):
+            raise ValueError(f"unknown cache_mode: {ec.cache_mode!r}")
         self.cfg, self.ec = cfg, ec
+        self.paged = ec.cache_mode == "paged"
         self.opts = dataclasses.replace(opts, remat=False)
         self.params = params
         cache_dtype = jnp.float32 if opts.compute_dtype == jnp.float32 \
             else jnp.bfloat16
-        self._cache = model.init_slot_cache(cfg, ec.max_slots, ec.max_len,
-                                            cache_dtype)
-        self.scheduler = Scheduler(ec.max_slots, ec.prefill_batch,
-                                   ec.min_bucket, ec.max_len)
+        if self.paged:
+            self.scheduler = Scheduler(ec.max_slots, ec.prefill_batch,
+                                       ec.min_bucket, ec.max_len,
+                                       page_size=ec.page_size,
+                                       total_pages=ec.total_pages)
+            self._cache = model.init_paged_cache(
+                cfg, self.scheduler.total_pages, ec.page_size, cache_dtype)
+        else:
+            self.scheduler = Scheduler(ec.max_slots, ec.prefill_batch,
+                                       ec.min_bucket, ec.max_len)
+            self._cache = model.init_slot_cache(cfg, ec.max_slots,
+                                                ec.max_len, cache_dtype)
         M = ec.max_slots
         self._positions = np.zeros((M,), np.int32)   # next KV write index
         self._cur_tok = np.zeros((M,), np.int32)     # last sampled token
         self._temps = np.zeros((M,), np.float32)
         self._topks = np.zeros((M,), np.int32)
         self._seeds = np.zeros((M,), np.int32)
-        self._slots: Dict[int, _SlotState] = {}      # active slot -> state
+        self._slots: dict[int, Sequence] = {}        # active slot -> seq
         self.n_decode_steps = 0
         self.n_prefill_calls = 0
-        self.n_prefill_tokens = 0
+        self.n_prefill_tokens = 0   # prefill *work* (resumes re-pay)
+        self.n_prompt_tokens = 0    # unique prompt tokens (first admit only)
+        # KV utilization accumulators (paged): valid rows vs held page rows
+        self._util_tokens = 0
+        self._util_page_tokens = 0
 
         cfg_, opts_ = self.cfg, self.opts
 
-        def decode_fn(params, cache, tokens, positions, temps, topks, seeds):
+        def decode_slot(params, cache, tokens, positions, temps, topks,
+                        seeds):
             logits, cache = model.decode(params, cfg_, opts_, cache,
                                          tokens[:, None], positions)
+            keys = _fold_keys(seeds, positions)
+            return _sample_batch(logits, keys, temps, topks), cache
+
+        def decode_paged(params, cache, tokens, positions, block_tables,
+                         temps, topks, seeds):
+            logits, cache = model.decode(params, cfg_, opts_, cache,
+                                         tokens[:, None], positions,
+                                         block_tables=block_tables)
             keys = _fold_keys(seeds, positions)
             return _sample_batch(logits, keys, temps, topks), cache
 
@@ -148,9 +178,12 @@ class Engine:
             keys = _fold_keys(seeds, last_idx)
             return _sample_batch(logits, keys, temps, topks), kv
 
-        self._decode_step = jax.jit(decode_fn, donate_argnums=(1,))
+        self._decode_step = jax.jit(
+            decode_paged if self.paged else decode_slot, donate_argnums=(1,))
         self._prefill_step = jax.jit(prefill_fn)
-        self._cache_insert = jax.jit(model.cache_insert, donate_argnums=(0,))
+        self._cache_insert = jax.jit(
+            model.cache_insert_paged if self.paged else model.cache_insert,
+            donate_argnums=(0,))
 
     # -- request side ------------------------------------------------------
 
@@ -165,17 +198,33 @@ class Engine:
         self.n_decode_steps = 0
         self.n_prefill_calls = 0
         self.n_prefill_tokens = 0
+        self.n_prompt_tokens = 0
+        self._util_tokens = 0
+        self._util_page_tokens = 0
         self.scheduler.n_submitted = 0
         self.scheduler.n_completed = 0
         self.scheduler.n_evicted = 0
+        self.scheduler.n_preemptions = 0
 
     @property
     def has_work(self) -> bool:
         return self.scheduler.has_work
 
+    @property
+    def n_preemptions(self) -> int:
+        return self.scheduler.n_preemptions
+
+    @property
+    def kv_utilization(self) -> float:
+        """Mean fraction of held KV page rows holding valid tokens across
+        the decode steps so far (paged mode; 0.0 before any step)."""
+        if not self._util_page_tokens:
+            return 0.0
+        return self._util_tokens / self._util_page_tokens
+
     # -- admission (batched prefill) ---------------------------------------
 
-    def _admit(self, group: Sequence[ScheduledSeq]) -> List[RequestOutput]:
+    def _admit(self, group: Seq[ScheduledSeq]) -> List[RequestOutput]:
         now = time.perf_counter()
         G, P = len(group), self.ec.prefill_batch
         bucket = group[0].bucket
@@ -185,39 +234,54 @@ class Engine:
         topks = np.zeros((P,), np.int32)
         seeds = np.zeros((P,), np.int32)
         slots = np.zeros((P,), np.int32)
+        prompts = [ss.seq.full_prompt for ss in group]
         for i, ss in enumerate(group):
             sp = ss.request.sampling
-            n = ss.request.prompt.size
-            toks[i, :n] = ss.request.prompt
+            n = prompts[i].size
+            toks[i, :n] = prompts[i]
             last[i] = n - 1
             temps[i], topks[i], seeds[i] = sp.temperature, sp.top_k, sp.seed
             slots[i] = ss.slot
-        # pad rows beyond G with copies of row 0: identical KV scattered to
-        # the same slot, so the padded insert is a harmless repeat write
-        # and every bucket compiles exactly one (P, bucket) prefill.
-        for i in range(G, P):
-            toks[i], last[i], slots[i] = toks[0], last[0], slots[0]
+        if self.paged:
+            # padded rows keep all-zero page tables: their KV scatters into
+            # the reserved sink page, so the insert needs no masking and
+            # every bucket compiles exactly one (P, bucket) prefill.
+            rows = self.scheduler.page_table_rows(list(group), bucket)
+            page_tables = np.zeros((P, rows.shape[1]), np.int32)
+            page_tables[:G] = rows
+        else:
+            # pad rows beyond G with copies of row 0: identical KV scattered
+            # to the same slot is a harmless repeat write.
+            for i in range(G, P):
+                toks[i], last[i], slots[i] = toks[0], last[0], slots[0]
 
         first_tok, kv = self._prefill_step(self.params, jnp.asarray(toks),
                                            jnp.asarray(last),
                                            jnp.asarray(temps),
                                            jnp.asarray(topks),
                                            jnp.asarray(seeds))
-        self._cache = self._cache_insert(self._cache, kv, jnp.asarray(slots))
+        if self.paged:
+            self._cache = self._cache_insert(self._cache, kv,
+                                             jnp.asarray(page_tables))
+        else:
+            self._cache = self._cache_insert(self._cache, kv,
+                                             jnp.asarray(slots))
         self.n_prefill_calls += 1
-        self.n_prefill_tokens += int(sum(s.request.prompt.size
-                                         for s in group))
+        self.n_prefill_tokens += int(sum(p.size for p in prompts[:G]))
         first_np = np.asarray(first_tok)
 
         finished: List[RequestOutput] = []
         t_first = time.perf_counter()
         for i, ss in enumerate(group):
-            st = _SlotState(ss.request, now)
-            st.first_token_time = t_first
-            st.tokens.append(int(first_np[i]))
-            self._slots[ss.slot] = st
+            seq = ss.seq
+            seq.admit_time = now
+            if seq.first_token_time is None:
+                seq.first_token_time = t_first
+                self.n_prompt_tokens += int(seq.request.prompt.size)
+            seq.generated.append(int(first_np[i]))
+            self._slots[ss.slot] = seq
             sp = ss.request.sampling
-            self._positions[ss.slot] = ss.request.prompt.size
+            self._positions[ss.slot] = prompts[i].size
             self._cur_tok[ss.slot] = first_np[i]
             self._temps[ss.slot] = sp.temperature
             self._topks[ss.slot] = sp.top_k
@@ -230,16 +294,27 @@ class Engine:
     # -- decode ------------------------------------------------------------
 
     def _decode_active(self) -> List[RequestOutput]:
-        next_tok, self._cache = self._decode_step(
-            self.params, self._cache, jnp.asarray(self._cur_tok),
-            jnp.asarray(self._positions), jnp.asarray(self._temps),
-            jnp.asarray(self._topks), jnp.asarray(self._seeds))
+        if self.paged:
+            self._util_tokens += self.scheduler.tokens_in_use
+            self._util_page_tokens += (self.scheduler.pages_in_use
+                                       * self.ec.page_size)
+            next_tok, self._cache = self._decode_step(
+                self.params, self._cache, jnp.asarray(self._cur_tok),
+                jnp.asarray(self._positions),
+                jnp.asarray(self.scheduler.block_tables),
+                jnp.asarray(self._temps), jnp.asarray(self._topks),
+                jnp.asarray(self._seeds))
+        else:
+            next_tok, self._cache = self._decode_step(
+                self.params, self._cache, jnp.asarray(self._cur_tok),
+                jnp.asarray(self._positions), jnp.asarray(self._temps),
+                jnp.asarray(self._topks), jnp.asarray(self._seeds))
         self.n_decode_steps += 1
         next_np = np.asarray(next_tok)
         finished: List[RequestOutput] = []
         for slot in list(self._slots):
-            st = self._slots[slot]
-            st.tokens.append(int(next_np[slot]))
+            seq = self._slots[slot]
+            seq.generated.append(int(next_np[slot]))
             self._positions[slot] += 1
             self._cur_tok[slot] = next_np[slot]
             done = self._finish_reason(slot)
@@ -248,36 +323,41 @@ class Engine:
         return finished
 
     def _finish_reason(self, slot: int) -> Optional[str]:
-        st = self._slots[slot]
-        sp = st.req.sampling
-        if sp.stop_token >= 0 and st.tokens[-1] == sp.stop_token:
+        seq = self._slots[slot]
+        sp = seq.request.sampling
+        if sp.stop_token >= 0 and seq.generated[-1] == sp.stop_token:
             return "stop"
-        if len(st.tokens) >= sp.max_new_tokens:
+        if len(seq.generated) >= sp.max_new_tokens:
             return "length"
-        if self._positions[slot] >= self.ec.max_len:
-            return "evicted"       # cache region exhausted mid-decode
+        if not self.paged and self._positions[slot] >= self.ec.max_len:
+            return "evicted"       # slot region exhausted; terminal (legacy)
         return None
 
-    def _complete(self, slot: int, reason: str) -> RequestOutput:
-        st = self._slots.pop(slot)
-        self.scheduler.complete(slot, evicted=(reason == "evicted"))
+    def _clear_slot(self, slot: int) -> None:
+        self._slots.pop(slot, None)
         self._positions[slot] = 0
         self._cur_tok[slot] = 0
         self._temps[slot] = 0.0
         self._topks[slot] = 0
         self._seeds[slot] = 0
+
+    def _complete(self, slot: int, reason: str) -> RequestOutput:
+        seq = self._slots[slot]
+        self.scheduler.complete(slot, evicted=(reason == "evicted"))
+        self._clear_slot(slot)
         now = time.perf_counter()
-        arrive = st.req.arrival_time or st.admit_time
+        arrive = seq.request.arrival_time or seq.admit_time
         return RequestOutput(
-            uid=st.req.uid, prompt=st.req.prompt, token_ids=st.tokens,
-            finish_reason=reason,
-            ttft_s=(st.first_token_time or now) - arrive,
-            latency_s=now - arrive)
+            uid=seq.request.uid, prompt=seq.request.prompt,
+            token_ids=list(seq.generated), finish_reason=reason,
+            ttft_s=(seq.first_token_time or now) - arrive,
+            latency_s=now - arrive, n_preempts=seq.n_preempts)
 
     # -- main loop ---------------------------------------------------------
 
     def step(self) -> List[RequestOutput]:
-        """One engine iteration: admit every admissible prefill group, then
+        """One engine iteration: admit every admissible prefill group,
+        grow/preempt pages for the coming decode writes (paged mode), then
         advance all active slots one decode step."""
         finished: List[RequestOutput] = []
         while True:
@@ -285,11 +365,16 @@ class Engine:
             if not group:
                 break
             finished.extend(self._admit(group))
+        if self.paged and self._slots:
+            for slot, _seq in self.scheduler.ensure_decode_pages():
+                # sequence went back to the waiting queue with its tokens;
+                # only the device-side slot state is dropped here
+                self._clear_slot(slot)
         if self._slots:
             finished.extend(self._decode_active())
         return finished
 
-    def generate(self, requests: Sequence[Request]) -> List[RequestOutput]:
+    def generate(self, requests: Seq[Request]) -> List[RequestOutput]:
         """Closed-set convenience: run a request list to completion."""
         for r in requests:
             self.submit(r)

@@ -1,10 +1,11 @@
 """Request scheduler for the continuous-batching engine (DESIGN.md Sec. 6).
 
 Pure host-side bookkeeping — no jax. The engine owns the device state
-(slot KV cache, jitted steps); the scheduler decides *which* request goes
+(KV cache, jitted steps); the scheduler decides *which* request goes
 *where* and keeps the shapes the engine compiles against fixed:
 
-  * a FCFS waiting queue of submitted requests,
+  * a FCFS waiting queue of submitted sequences (resumed preemptees keep
+    their original priority, so they re-enter ahead of younger traffic),
   * a fixed pool of decode slots (free-list, lowest id first so the same
     traffic pattern replays deterministically),
   * bucketed admission: each scheduling round drains up to
@@ -14,17 +15,30 @@ Pure host-side bookkeeping — no jax. The engine owns the device state
     number of distinct compiled prefill shapes stays
     O(log(max_len) * prefill_batch).
 
-Eviction: the engine calls ``complete(slot, ...)`` both for finished
-sequences and for sequences evicted mid-decode (cache region exhausted);
-the slot returns to the free list and the next ``schedule()`` round can
-re-admit a waiting request into it.
+Two KV accounting modes:
+
+  * **paged** (``page_size`` set, the default engine mode): KV lives in a
+    shared pool of fixed-size pages; each running slot owns a block-table
+    row naming its pages. Admission charges pages for the prompt; decode
+    growth allocates one page at a time (``ensure_decode_pages``). On pool
+    exhaustion the *lowest-priority* (latest-submitted) running sequence
+    is preempted: its pages are freed and it is returned to the waiting
+    queue carrying its generated tokens, to be resumed later by
+    re-prefilling prompt+generated. Preemption is never terminal — the
+    FCFS priority order guarantees the oldest sequence always progresses,
+    and ``submit`` rejects requests whose worst case could not fit even an
+    otherwise-empty pool, so a sole survivor can always grow to completion.
+  * **slot** (legacy baseline, kept for the equal-HBM A/B benchmark): one
+    fixed ``max_len`` region per slot; a sequence that outgrows it is
+    evicted *terminally* (``complete(slot, evicted=True)``).
 """
 
 from __future__ import annotations
 
+import bisect
 import dataclasses
 from collections import deque
-from typing import Deque, Dict, List, Optional, Sequence, Tuple
+from typing import Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -53,11 +67,46 @@ class Request:
 
 
 @dataclasses.dataclass
-class ScheduledSeq:
-    """An admission decision: request -> slot, padded to a bucket."""
+class Sequence:
+    """A request's mutable serving state, surviving preemption/resume.
+
+    ``generated`` accumulates across preemptions; on resume the engine
+    re-prefills ``full_prompt`` (original prompt + generated so far) and
+    sampling continues exactly where it left off — sample keys are folded
+    by (seed, position), never by slot or batch.
+    """
     request: Request
+    order: int                            # submission index = FCFS priority
+    generated: List[int] = dataclasses.field(default_factory=list)
+    first_token_time: Optional[float] = None
+    admit_time: float = 0.0
+    n_preempts: int = 0
+
+    @property
+    def full_prompt(self) -> np.ndarray:
+        if not self.generated:
+            return self.request.prompt
+        return np.concatenate([
+            self.request.prompt,
+            np.asarray(self.generated, np.int32)])
+
+    @property
+    def next_write_pos(self) -> int:
+        """KV row the next decode step writes: the last generated token's
+        position (its KV is written by the step that samples the next)."""
+        return self.request.prompt.size + len(self.generated) - 1
+
+
+@dataclasses.dataclass
+class ScheduledSeq:
+    """An admission decision: sequence -> slot, padded to a bucket."""
+    seq: Sequence
     slot: int
     bucket: int                           # padded prompt length
+
+    @property
+    def request(self) -> Request:         # convenience for callers/tests
+        return self.seq.request
 
 
 def bucket_len(n: int, min_bucket: int = 16) -> int:
@@ -68,33 +117,83 @@ def bucket_len(n: int, min_bucket: int = 16) -> int:
     return b
 
 
+def pages_for(n_tokens: int, page_size: int) -> int:
+    """Pages needed to hold ``n_tokens`` KV rows."""
+    return -(-n_tokens // page_size)
+
+
 class Scheduler:
-    """FCFS admission over a fixed slot pool with bucketed prefill groups."""
+    """FCFS admission over a fixed slot pool; paged or slot KV accounting."""
 
     def __init__(self, max_slots: int, prefill_batch: int = 4,
-                 min_bucket: int = 16, max_len: int = 2048):
+                 min_bucket: int = 16, max_len: int = 2048,
+                 page_size: Optional[int] = None,
+                 total_pages: Optional[int] = None):
         if max_slots < 1:
             raise ValueError("max_slots must be >= 1")
         self.max_slots = max_slots
         self.prefill_batch = max(1, prefill_batch)
         self.min_bucket = min_bucket
         self.max_len = max_len
-        self._waiting: Deque[Request] = deque()
+        self.paged = page_size is not None
+        self._waiting: Deque[Sequence] = deque()
         self._free: List[int] = list(range(max_slots))
-        self._running: Dict[int, Request] = {}       # slot -> request
+        self._running: Dict[int, Sequence] = {}      # slot -> sequence
+        self._order = 0
         # counters for the perf report
         self.n_submitted = 0
         self.n_completed = 0
         self.n_evicted = 0
+        self.n_preemptions = 0
+
+        if self.paged:
+            if page_size < 1:
+                raise ValueError("page_size must be >= 1")
+            self.page_size = page_size
+            self.pages_per_slot = pages_for(max_len, page_size)
+            # capacity is the block-table span, a whole number of pages
+            self.capacity = self.pages_per_slot * page_size
+            if total_pages is None:
+                # equal HBM with a slot cache of the same (slots, max_len),
+                # plus the reserved sink page
+                total_pages = max_slots * self.pages_per_slot + 1
+            if total_pages < 2:
+                raise ValueError("total_pages must be >= 2 (page 0 is the "
+                                 "reserved sink)")
+            self.total_pages = total_pages
+            self.usable_pages = total_pages - 1
+            self._free_pages: List[int] = list(range(1, total_pages))
+            # block tables: (max_slots, pages_per_slot) int32, row-owned by
+            # the running slot; 0 = sink. Handed to the jitted decode step
+            # as a traced array every iteration.
+            self.block_tables = np.zeros((max_slots, self.pages_per_slot),
+                                         np.int32)
+            self._n_pages = np.zeros((max_slots,), np.int32)
+        else:
+            self.capacity = max_len
 
     # -- queue side --------------------------------------------------------
 
     def submit(self, request: Request) -> None:
-        if request.prompt.size >= self.max_len:
+        worst = request.prompt.size + request.sampling.max_new_tokens
+        if self.paged:
+            if worst > self.capacity:
+                raise ValueError(
+                    f"request {request.uid}: prompt {request.prompt.size} + "
+                    f"max_new_tokens {request.sampling.max_new_tokens} "
+                    f"exceeds per-sequence capacity {self.capacity} "
+                    f"({self.pages_per_slot} pages x {self.page_size})")
+            if pages_for(worst, self.page_size) > self.usable_pages:
+                raise ValueError(
+                    f"request {request.uid}: worst case needs "
+                    f"{pages_for(worst, self.page_size)} pages but the pool "
+                    f"has {self.usable_pages} — could never complete")
+        elif request.prompt.size >= self.max_len:
             raise ValueError(
                 f"request {request.uid}: prompt len {request.prompt.size} "
                 f">= max_len {self.max_len} leaves no room to decode")
-        self._waiting.append(request)
+        self._waiting.append(Sequence(request, self._order))
+        self._order += 1
         self.n_submitted += 1
 
     @property
@@ -109,48 +208,143 @@ class Scheduler:
     def has_work(self) -> bool:
         return bool(self._waiting or self._running)
 
-    def running(self) -> Dict[int, Request]:
+    @property
+    def pages_in_use(self) -> int:
+        return int(self._n_pages.sum()) if self.paged else 0
+
+    @property
+    def tokens_in_use(self) -> int:
+        """Valid KV rows held by running sequences (utilization numerator)."""
+        return sum(s.next_write_pos for s in self._running.values())
+
+    def running(self) -> Dict[int, Sequence]:
         return dict(self._running)
 
     # -- admission ---------------------------------------------------------
 
+    def _bucket(self, seq: Sequence) -> int:
+        # clamp: a bucket never exceeds the per-sequence cache capacity
+        return min(bucket_len(seq.full_prompt.size, self.min_bucket),
+                   self.capacity)
+
     def schedule(self) -> List[ScheduledSeq]:
-        """Admit up to min(free slots, prefill_batch) requests that share
+        """Admit up to min(free slots, prefill_batch) sequences that share
         one padded-length bucket; FCFS, the head of the queue pins the
-        bucket for the round.  Returns [] when nothing is admissible."""
+        bucket for the round. In paged mode admission additionally charges
+        the pool for each prompt's pages and stops when it cannot pay
+        (head-of-line blocking keeps FCFS exact). Returns [] when nothing
+        is admissible."""
         if not self._waiting or not self._free:
             return []
 
-        def _bucket(req: Request) -> int:
-            # clamp: a bucket never exceeds the per-slot cache region
-            return min(bucket_len(req.prompt.size, self.min_bucket),
-                       self.max_len)
-
-        head_bucket = _bucket(self._waiting[0])
+        head_bucket = self._bucket(self._waiting[0])
         group: List[ScheduledSeq] = []
-        kept: Deque[Request] = deque()
-        while self._waiting and self._free and \
+        kept: Deque[Sequence] = deque()
+        blocked = False
+        while self._waiting and self._free and not blocked and \
                 len(group) < self.prefill_batch:
-            req = self._waiting.popleft()
-            if _bucket(req) != head_bucket:
-                kept.append(req)
+            seq = self._waiting.popleft()
+            if self._bucket(seq) != head_bucket:
+                kept.append(seq)
                 continue
+            if self.paged:
+                need = pages_for(seq.full_prompt.size, self.page_size)
+                worst = pages_for(seq.request.prompt.size
+                                  + seq.request.sampling.max_new_tokens,
+                                  self.page_size)
+                # one page of decode-growth headroom (when the sequence
+                # will grow at all): admitting into an exactly-full pool
+                # would preempt the newcomer at the next page boundary and
+                # re-pay its whole prefill
+                if need + min(1, worst - need) > len(self._free_pages):
+                    kept.append(seq)
+                    blocked = True    # FCFS: don't let younger traffic pass
+                    continue
             slot = self._free.pop(0)
-            self._running[slot] = req
-            group.append(ScheduledSeq(req, slot, head_bucket))
+            if self.paged:
+                self._alloc_pages(slot, need)
+            self._running[slot] = seq
+            group.append(ScheduledSeq(seq, slot, head_bucket))
         self._waiting = kept + self._waiting   # preserve FCFS order
         return group
 
-    # -- completion / eviction --------------------------------------------
+    def page_table_rows(self, group: List[ScheduledSeq],
+                        bucket: int) -> np.ndarray:
+        """(len(group), ceil(bucket/page_size)) page ids for cache insert;
+        entries past a sequence's allocated pages are 0 (sink)."""
+        n = pages_for(bucket, self.page_size)
+        rows = np.zeros((len(group), n), np.int32)
+        for i, ss in enumerate(group):
+            take = min(n, int(self._n_pages[ss.slot]))
+            rows[i, :take] = self.block_tables[ss.slot, :take]
+        return rows
 
-    def complete(self, slot: int, evicted: bool = False) -> Request:
-        """Release a slot (finished or evicted sequence); slot is reusable
-        from the next schedule() round."""
-        if slot not in self._running:
-            raise KeyError(f"slot {slot} is not running")
-        req = self._running.pop(slot)
+    # -- paged decode growth / preemption ---------------------------------
+
+    def _alloc_pages(self, slot: int, n: int) -> None:
+        for _ in range(n):
+            page = self._free_pages.pop(0)
+            self.block_tables[slot, self._n_pages[slot]] = page
+            self._n_pages[slot] += 1
+
+    def _release_slot(self, slot: int) -> Sequence:
+        seq = self._running.pop(slot)
+        if self.paged:
+            held = int(self._n_pages[slot])
+            self._free_pages.extend(
+                int(p) for p in self.block_tables[slot, :held])
+            self._free_pages.sort()
+            self.block_tables[slot, :] = 0
+            self._n_pages[slot] = 0
         self._free.append(slot)
         self._free.sort()
+        return seq
+
+    def _preempt(self, slot: int) -> Sequence:
+        """Free a running sequence's pages and requeue it (FCFS position
+        restored via its submission order)."""
+        seq = self._release_slot(slot)
+        seq.n_preempts += 1
+        self.n_preemptions += 1
+        orders = [s.order for s in self._waiting]
+        self._waiting.insert(bisect.bisect_left(orders, seq.order), seq)
+        return seq
+
+    def ensure_decode_pages(self) -> List[Tuple[int, Sequence]]:
+        """Before a decode step: make sure every running slot owns the page
+        its next KV write lands in, preempting lowest-priority sequences
+        on pool exhaustion. Returns the (slot, sequence) pairs preempted
+        this round — the engine must clear their device-side slot state.
+        """
+        if not self.paged:
+            return []
+        preempted: List[Tuple[int, Sequence]] = []
+        for slot in sorted(self._running,
+                           key=lambda s: self._running[s].order):
+            if slot not in self._running:     # preempted as a victim below
+                continue
+            seq = self._running[slot]
+            need = seq.next_write_pos // self.page_size + 1
+            while int(self._n_pages[slot]) < need:
+                if self._free_pages:
+                    self._alloc_pages(slot, 1)
+                    continue
+                victim = max(self._running,
+                             key=lambda s: self._running[s].order)
+                preempted.append((victim, self._preempt(victim)))
+                if victim == slot:
+                    break                     # preempted itself; move on
+        return preempted
+
+    # -- completion / eviction --------------------------------------------
+
+    def complete(self, slot: int, evicted: bool = False) -> Sequence:
+        """Release a slot (finished sequence, or slot-mode eviction); the
+        slot — and in paged mode its pages — are reusable from the next
+        schedule() round."""
+        if slot not in self._running:
+            raise KeyError(f"slot {slot} is not running")
+        seq = self._release_slot(slot)
         self.n_completed += 1
         self.n_evicted += int(evicted)
-        return req
+        return seq

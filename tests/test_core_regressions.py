@@ -1,0 +1,110 @@
+"""Deterministic regression tests for core quantization bugfixes.
+
+These live outside test_quantizers.py so they run even where hypothesis
+is absent (that module importorskips wholesale): each pins a bug that
+used to fail *silently* — ignored config, burned step budget, corrupted
+neighbor nibbles.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import packing
+from repro.core.uniq import (FROZEN, NOISE, GradualSchedule, UniqConfig,
+                             transform_param)
+
+
+def _weights(shape=(64, 32), mu=0.001, sigma=0.03, seed=0):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape) * sigma + mu
+
+
+class TestEmpiricalDistRouted:
+    def test_dists_differ_on_skewed_tensor(self):
+        """Regression: dist="empirical" was silently ignored (the kquantile
+        path always fit a Gaussian). On a skewed tensor the two dists must
+        produce different outputs, and the empirical equal-mass bins must
+        fit the true distribution at least as well."""
+        key = jax.random.PRNGKey(3)
+        w = jnp.exp(jax.random.normal(key, (128, 128)))  # log-normal skew
+        rng = jax.random.PRNGKey(0)
+        out_g = transform_param(w, rng, jnp.int32(FROZEN),
+                                UniqConfig(w_bits=4, dist="gaussian"))
+        out_e = transform_param(w, rng, jnp.int32(FROZEN),
+                                UniqConfig(w_bits=4, dist="empirical"))
+        assert not jnp.allclose(out_g, out_e)
+        mse_g = float(jnp.mean((out_g - w) ** 2))
+        mse_e = float(jnp.mean((out_e - w) ** 2))
+        assert mse_e < mse_g
+        # NOISE mode routes through the same CDF pair
+        n_g = transform_param(w, rng, jnp.int32(NOISE),
+                              UniqConfig(w_bits=4, dist="gaussian"))
+        n_e = transform_param(w, rng, jnp.int32(NOISE),
+                              UniqConfig(w_bits=4, dist="empirical"))
+        assert not jnp.allclose(n_g, n_e)
+
+    def test_per_channel_falls_back_to_gaussian(self):
+        """The sorted-sample ECDF has no per-channel form; per-channel
+        statistics stay Gaussian regardless of cfg.dist."""
+        w = _weights((64, 32))
+        rng = jax.random.PRNGKey(0)
+        out_e = transform_param(
+            w, rng, jnp.int32(FROZEN),
+            UniqConfig(w_bits=4, dist="empirical", per_channel=True))
+        out_g = transform_param(
+            w, rng, jnp.int32(FROZEN),
+            UniqConfig(w_bits=4, dist="gaussian", per_channel=True))
+        assert jnp.allclose(out_e, out_g)
+
+    def test_unknown_dist_raises(self):
+        with pytest.raises(ValueError):
+            transform_param(_weights((8, 8)), jax.random.PRNGKey(0),
+                            jnp.int32(FROZEN),
+                            UniqConfig(w_bits=4, dist="cauchy"))
+
+
+class TestGradualScheduleClamp:
+    def test_n_blocks_clamped_every_stage_has_noise(self):
+        """Regression: n_blocks > n_layers created empty blocks whose
+        stages ran with zero NOISE layers, silently burning step budget."""
+        s = GradualSchedule(n_layers=3, n_blocks=8, total_steps=60,
+                            iterations=2)
+        assert s.n_blocks == 3
+        for step in range(0, s.n_stages * s.steps_per_stage,
+                          s.steps_per_stage):
+            modes = np.asarray(s.modes_at(step))
+            assert (modes == NOISE).sum() >= 1, f"stage at step {step}"
+        # after the schedule everything is frozen
+        assert (np.asarray(s.modes_at(10_000)) == FROZEN).all()
+
+    def test_every_block_nonempty(self):
+        for n_layers in (1, 2, 3, 5, 7, 12):
+            for n_blocks in (1, 2, 3, 4, 8, 16):
+                s = GradualSchedule(n_layers=n_layers, n_blocks=n_blocks,
+                                    total_steps=10)
+                blocks = np.asarray(s.block_of_layer())
+                assert set(blocks.tolist()) == set(range(s.n_blocks))
+
+    def test_invalid_args_raise(self):
+        with pytest.raises(ValueError):
+            GradualSchedule(n_layers=0, n_blocks=1, total_steps=10)
+        with pytest.raises(ValueError):
+            GradualSchedule(n_layers=4, n_blocks=0, total_steps=10)
+
+
+class TestPackInt4Masking:
+    def test_out_of_range_codes_masked(self):
+        """Regression: codes >= 16 bled their high bits into the odd
+        neighbor's nibble. pack must mask to the low nibble so a bad even
+        element can never corrupt its neighbor."""
+        codes = jnp.array([[3, 17], [250, 1], [15, 16]])
+        un = np.asarray(packing.unpack_int4(packing.pack_int4(codes)))
+        np.testing.assert_array_equal(un, np.asarray(codes) & 0x0F)
+        # in particular the in-range elements survive their bad neighbors
+        assert un[0, 0] == 3 and un[1, 1] == 1 and un[2, 0] == 15
+
+    def test_in_range_roundtrip_exact(self):
+        codes = jax.random.randint(jax.random.PRNGKey(0), (8, 16), 0, 16)
+        assert bool(jnp.all(
+            packing.unpack_int4(packing.pack_int4(codes)) == codes))

@@ -1,6 +1,7 @@
-"""Continuous-batching engine: scheduler unit tests, greedy parity with the
-legacy serve.generate path (w_bits 4 and 16), and an overlapping-stream
-integration test (admission / eviction / slot reuse under load)."""
+"""Continuous-batching engine: scheduler unit tests (slot + paged page
+accounting / preemption), greedy parity with the legacy serve.generate
+path (w_bits 4 and 16), preempt/resume round-trips, and an
+overlapping-stream integration test (admission / slot reuse under load)."""
 
 import jax
 import jax.numpy as jnp
@@ -11,7 +12,7 @@ from repro.configs import base as cb
 from repro.models import model
 from repro.serve import serve as serve_lib
 from repro.serve.engine import Engine, EngineConfig, Request, SamplingParams
-from repro.serve.scheduler import Scheduler, bucket_len
+from repro.serve.scheduler import Scheduler, bucket_len, pages_for
 
 
 def _req(uid, n, vocab=256, seed=None, **kw):
@@ -79,6 +80,102 @@ class TestScheduler:
         s = Scheduler(max_slots=1, max_len=16)
         with pytest.raises(ValueError):
             s.submit(_req(0, 16))
+
+
+# ---------------------------------------------------------------------------
+# Paged scheduler (page accounting, preemption, resume ordering)
+# ---------------------------------------------------------------------------
+
+class TestPagedScheduler:
+    def _sched(self, **kw):
+        kw.setdefault("max_slots", 2)
+        kw.setdefault("prefill_batch", 2)
+        kw.setdefault("min_bucket", 8)
+        kw.setdefault("max_len", 32)
+        kw.setdefault("page_size", 8)
+        return Scheduler(**kw)
+
+    def test_pages_for(self):
+        assert pages_for(1, 8) == 1
+        assert pages_for(8, 8) == 1
+        assert pages_for(9, 8) == 2
+
+    def test_rejects_worst_case_beyond_capacity(self):
+        s = self._sched()                       # capacity 32
+        with pytest.raises(ValueError):
+            s.submit(_req(0, 10, max_new_tokens=30))
+
+    def test_rejects_worst_case_beyond_pool(self):
+        s = self._sched(total_pages=3)          # 2 usable pages = 16 rows
+        with pytest.raises(ValueError):
+            s.submit(_req(0, 10, max_new_tokens=10))
+
+    def test_admission_charges_prompt_pages(self):
+        s = self._sched(total_pages=9)          # 8 usable pages
+        s.submit(_req(0, 12, max_new_tokens=4))     # prompt -> 2 pages
+        (a,) = s.schedule()
+        assert s.pages_in_use == 2
+        assert len(s._free_pages) == 6
+        # block table prefix is the allocated pages, rest sink (0)
+        assert (s.block_tables[a.slot, :2] > 0).all()
+        assert (s.block_tables[a.slot, 2:] == 0).all()
+
+    def test_page_table_rows_pads_with_sink(self):
+        s = self._sched(total_pages=9)
+        s.submit(_req(0, 5, max_new_tokens=4))      # 1 page
+        group = s.schedule()
+        rows = s.page_table_rows(group, bucket=16)  # 2 page slots
+        assert rows.shape == (1, 2)
+        assert rows[0, 0] > 0 and rows[0, 1] == 0
+
+    def test_admission_blocks_when_pool_dry(self):
+        s = self._sched(total_pages=3)          # 2 usable pages
+        s.submit(_req(0, 12, max_new_tokens=4))     # prompt needs 2 pages
+        s.submit(_req(1, 12, max_new_tokens=4))
+        assert len(s.schedule()) == 1           # second can't pay
+        assert s.schedule() == []
+        assert s.n_waiting == 1
+
+    def test_decode_growth_allocates_on_page_boundary(self):
+        s = self._sched(total_pages=9)
+        s.submit(_req(0, 8, max_new_tokens=16))     # prompt fills page 0
+        (a,) = s.schedule()
+        a.seq.generated.append(1)               # next write pos = 8
+        assert s.ensure_decode_pages() == []
+        assert s.pages_in_use == 2              # grew by one page
+        assert s.n_preemptions == 0
+
+    def test_preempts_newest_and_resumes_in_order(self):
+        s = self._sched(total_pages=5)          # 4 usable pages
+        s.submit(_req(0, 8, max_new_tokens=24))     # worst 4 pages: fits solo
+        s.submit(_req(1, 8, max_new_tokens=24))
+        g = s.schedule()
+        assert len(g) == 2                      # 1 page each
+        for ss in g:
+            ss.seq.generated.extend([1] * 9)    # each now needs 3 pages
+        preempted = s.ensure_decode_pages()
+        # pool of 4 can't hold 3+3: newest (uid 1) is the victim
+        assert [p[1].request.uid for p in preempted] == [1]
+        assert s.n_preemptions == 1
+        assert s.n_running == 1
+        # victim waits with its generated tokens, ahead of younger traffic
+        s.submit(_req(2, 8, max_new_tokens=4))
+        assert [q.request.uid for q in s._waiting] == [1, 2]
+        assert len(s._waiting[0].generated) == 9
+        # once uid 0 completes, uid 1 resumes into the freed pages
+        s.complete(g[0].slot)
+        (r,) = s.schedule()
+        assert r.request.uid == 1
+        assert r.seq.full_prompt.size == 8 + 9
+
+    def test_sole_runner_never_self_preempts(self):
+        s = self._sched(total_pages=5)          # 4 usable = worst case
+        s.submit(_req(0, 8, max_new_tokens=24))     # worst exactly 4 pages
+        (a,) = s.schedule()
+        for _ in range(23):
+            a.seq.generated.append(1)
+        assert s.ensure_decode_pages() == []    # grew to 4 pages, no preempt
+        assert s.pages_in_use == 4
 
 
 # ---------------------------------------------------------------------------
@@ -151,7 +248,7 @@ def test_engine_overlapping_stream(rng, cpu_opts):
     for r, o in zip(reqs, outs):
         assert o.uid == r.uid
         assert len(o.token_ids) == r.sampling.max_new_tokens
-        assert o.finish_reason == "length"
+        assert o.finish_reason == "length"    # never "evicted" when paged
         assert o.ttft_s >= 0.0 and o.latency_s >= o.ttft_s
     # slots were reused: 9 requests through 3 slots
     assert eng.scheduler.max_slots == 3
@@ -162,12 +259,14 @@ def test_engine_overlapping_stream(rng, cpu_opts):
     assert solo_out.token_ids == outs[0].token_ids
 
 
-def test_engine_eviction_on_cache_exhaustion(rng, cpu_opts):
-    """A sequence that outgrows its slot region is evicted mid-decode and
-    the slot is handed to a waiting request."""
+def test_engine_slot_mode_eviction_on_cache_exhaustion(rng, cpu_opts):
+    """Legacy slot cache (the A/B baseline): a sequence that outgrows its
+    fixed region is evicted *terminally* and the slot is handed to a
+    waiting request — exactly the failure mode the paged cache removes."""
     cfg = cb.get_smoke("granite_3_8b")
     params = model.init(rng, cfg)
-    ec = EngineConfig(max_slots=1, max_len=16, prefill_batch=1, min_bucket=8)
+    ec = EngineConfig(max_slots=1, max_len=16, prefill_batch=1, min_bucket=8,
+                      cache_mode="slot")
     eng = Engine(params, cfg, cpu_opts, ec)
     long_req = _req(0, 8, vocab=cfg.vocab, max_new_tokens=100)
     short_req = _req(1, 4, vocab=cfg.vocab, max_new_tokens=2)
@@ -178,6 +277,66 @@ def test_engine_eviction_on_cache_exhaustion(rng, cpu_opts):
     assert len(outs[0].token_ids) == ec.max_len - 8 + 1
     assert outs[1].finish_reason == "length"
     assert eng.scheduler.n_evicted == 1
+
+
+# ---------------------------------------------------------------------------
+# Paged cache: preemption / resume
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("w_bits", [16, 4])
+def test_engine_preempt_resume_greedy_parity(w_bits, rng, cpu_opts):
+    """Requests whose prompt+generation (32 tokens) exceed the old
+    16-token per-slot region complete with exact greedy parity vs the
+    legacy serve.generate path, surviving a forced preemption/resume
+    round-trip — "evicted" never appears."""
+    cfg = cb.get_smoke("granite_3_8b")
+    params = model.init(rng, cfg)
+    sc = serve_lib.ServeConfig(w_bits=w_bits)
+    params = serve_lib.prepare_params(params, sc)
+    S0, n_new = 8, 24
+    # pool of 6 usable pages (48 rows) cannot hold two 32-token sequences:
+    # the newer one is preempted mid-decode and resumed after the first
+    # completes, re-prefilling prompt+generated
+    ec = EngineConfig(max_slots=2, max_len=64, prefill_batch=2, min_bucket=8,
+                      cache_mode="paged", page_size=8, total_pages=7)
+    eng = Engine(params, cfg, cpu_opts, ec)
+    reqs = [_req(i, S0, vocab=cfg.vocab, max_new_tokens=n_new)
+            for i in range(2)]
+    outs = eng.generate(reqs)
+    assert eng.n_preemptions >= 1
+    assert sum(o.n_preempts for o in outs) >= 1
+    for o, r in zip(outs, reqs):
+        assert o.finish_reason == "length"
+        ref = np.asarray(serve_lib.generate(
+            params, cfg, cpu_opts, sc, jnp.asarray(r.prompt)[None], n_new))
+        assert o.token_ids == ref[0].tolist()
+
+
+def test_engine_paged_never_evicts_and_resumes_sampled_stream(rng, cpu_opts):
+    """Under default paged config "evicted" is not a terminal finish
+    reason, and a *sampled* (temperature > 0) sequence resumes its exact
+    sample stream after preemption — keys fold on (seed, position), not
+    slot or batch."""
+    cfg = cb.get_smoke("granite_3_8b")
+    params = model.init(rng, cfg)
+    ec = EngineConfig(max_slots=2, max_len=64, prefill_batch=2, min_bucket=8,
+                      cache_mode="paged", page_size=8, total_pages=7)
+    eng = Engine(params, cfg, cpu_opts, ec)
+    reqs = [_req(i, 8, vocab=cfg.vocab, max_new_tokens=24, temperature=0.7,
+                 seed=100 + i) for i in range(2)]
+    outs = eng.generate(reqs)
+    assert eng.n_preemptions >= 1
+    assert all(o.finish_reason != "evicted" for o in outs)
+    assert all(len(o.token_ids) == 24 for o in outs)
+    # the preempted request's tokens must equal an unpreempted solo run
+    victim = max(outs, key=lambda o: o.n_preempts)
+    assert victim.n_preempts >= 1
+    solo = Engine(params, cfg, cpu_opts,
+                  EngineConfig(max_slots=2, max_len=64, prefill_batch=2,
+                               min_bucket=8, cache_mode="paged", page_size=8))
+    ref = solo.generate([reqs[victim.uid]])[0]
+    assert ref.n_preempts == 0
+    assert victim.token_ids == ref.token_ids
 
 
 def test_engine_stop_token(rng, cpu_opts):

@@ -190,6 +190,7 @@ class TestGradualSchedule:
         assert f._cache_size() == 1
 
 
+
 class TestPacking:
     @given(st.integers(0, 10_000))
     @settings(max_examples=30, deadline=None)
@@ -197,6 +198,13 @@ class TestPacking:
         codes = jax.random.randint(jax.random.PRNGKey(seed), (8, 16), 0, 16)
         assert bool(jnp.all(
             packing.unpack_int4(packing.pack_int4(codes)) == codes))
+
+    @given(st.integers(0, 10_000))
+    @settings(max_examples=20, deadline=None)
+    def test_roundtrip_out_of_range_is_low_nibble(self, seed):
+        codes = jax.random.randint(jax.random.PRNGKey(seed), (4, 8), 0, 256)
+        un = packing.unpack_int4(packing.pack_int4(codes))
+        assert bool(jnp.all(un == (codes & 0x0F)))
 
     def test_quantize_tensor_bytes(self):
         w = _weights((128, 256))
