@@ -1,26 +1,36 @@
 """Continuous-batching engine throughput benchmark.
 
-Sweeps slot count (decode batch) and weight bit-width on the smoke config
-and reports offline throughput (all requests queued at t=0) plus the
-legacy per-token serve.generate baseline — the numbers behind the
-EXPERIMENTS.md "Perf" engine table.
+Sweeps slot count, weight bit-width and **KV-cache bit-width** on the
+smoke config and reports offline throughput (all requests queued at t=0)
+plus the legacy per-token serve.generate baseline — the numbers behind
+the EXPERIMENTS.md "Perf" engine tables.
 
-The headline comparison is **slot vs paged KV at equal HBM**: the slot
-cache reserves ``max_len`` rows per slot, so its concurrency is
-``max_slots`` regardless of how short requests are; the paged cache
-spends the same pool of page rows on whatever is actually running, so at
-equal KV bytes it admits more concurrent sequences (and never loses one
-— preempt/resume replaces terminal eviction).
+Two equal-HBM comparisons:
+
+  * **slot vs paged** (PR 2): the slot cache reserves ``max_len`` rows
+    per slot, the paged cache spends the same pool of page rows on
+    whatever is actually running — more concurrency, zero lost requests.
+  * **kv_bits sweep** (this PR): one fixed pool *byte* budget (the PR 2
+    paged pool at bf16), served at kv_bits 16 / 8 / 4.  Quantized pages
+    cost fewer bytes, so the same budget holds more pages; each config
+    runs the slot count its pool can sustain at the worst-case sequence
+    length (usable_pages // pages_per_sequence), which is the concurrency
+    the byte-based scheduler actually admits — W8/W4 KV trades directly
+    into concurrent sequences.
 
     PYTHONPATH=src python -m benchmarks.engine_bench [--arch granite_3_8b]
 
 Prints ``name,us_per_call,derived`` CSV rows (harness convention); derived
-is new-tokens/s.
+is new-tokens/s.  Also writes ``BENCH_engine.json`` at the repo root
+(tok/s, TTFT, concurrency, preemptions per config) so the perf trajectory
+is machine-readable across PRs.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import time
 
 import jax
@@ -28,19 +38,25 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import base as cb
+from repro.models import kv_cache as kvq
 from repro.models import model
 from repro.models.lm import ModelOpts
 from repro.serve import serve as serve_lib
 from repro.serve.engine import Engine, EngineConfig, Request, SamplingParams
+from repro.serve.scheduler import pages_for
 
 PROMPT_LEN = 12
 NEW_TOKENS = 16
 N_REQUESTS = 16
+KV_SWEEP_REQUESTS = 48          # enough traffic to reach peak concurrency
 
 # equal-HBM A/B: both caches hold 8 * 64 = 512 KV rows (+1 sink page).
 SLOT_EC = dict(max_slots=8, max_len=64, prefill_batch=4, cache_mode="slot")
 PAGED_EC = dict(max_slots=16, max_len=64, prefill_batch=4,
                 cache_mode="paged", page_size=8, total_pages=65)
+
+JSON_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                         os.pardir, "BENCH_engine.json")
 
 
 def _requests(vocab, n=N_REQUESTS):
@@ -51,24 +67,38 @@ def _requests(vocab, n=N_REQUESTS):
             for i in range(n)]
 
 
-def bench_engine(params, cfg, opts, ec: EngineConfig):
+def bench_engine(params, cfg, opts, ec: EngineConfig, n_requests=N_REQUESTS):
     eng = Engine(params, cfg, opts, ec)
     eng.generate(_requests(cfg.vocab, 2))  # warm this instance's jit caches
     eng.reset_stats()
-    reqs = _requests(cfg.vocab)
+    reqs = _requests(cfg.vocab, n_requests)
     peak = 0
     for r in reqs:
         eng.submit(r)
     outs = []
+    occupancy = []
     t0 = time.perf_counter()
     while eng.has_work:
         outs.extend(eng.step())
+        occupancy.append(eng.scheduler.n_running)
         peak = max(peak, eng.scheduler.n_running)
     dt = time.perf_counter() - t0
     toks = sum(len(o.token_ids) for o in outs)
     assert not any(o.finish_reason == "evicted" for o in outs) \
         or ec.cache_mode == "slot"
-    return dt, toks / dt, peak
+    assert len(outs) == eng.scheduler.n_submitted, \
+        f"lost requests: {eng.scheduler.n_submitted} in, {len(outs)} out"
+    stats = {
+        "tok_s": round(toks / dt, 1),
+        "peak_concurrency": peak,
+        "mean_occupancy": round(float(np.mean(occupancy)), 2)
+        if occupancy else 0.0,
+        "ttft_mean_s": round(float(np.mean([o.ttft_s for o in outs])), 4),
+        "preemptions": eng.n_preemptions,
+        "completed": len(outs),
+        "submitted": eng.scheduler.n_submitted,  # == completed (asserted)
+    }
+    return dt, toks / dt, peak, stats
 
 
 def bench_legacy(params, cfg, opts, sc, batch=4):
@@ -83,8 +113,41 @@ def bench_legacy(params, cfg, opts, sc, batch=4):
     return dt, out.shape[0] * out.shape[1] / dt
 
 
-def run(arch="granite_3_8b"):
-    """Yield (name, us_per_token, new_tok_per_s) rows (run.py convention)."""
+def kv_sweep_configs(cfg, page_size=8, kv_bits_list=(16, 8, 4)):
+    """Equal-HBM kv_bits sweep: one byte budget (the PR 2 paged pool in
+    the bf16 *serving* layout), slot count = the concurrency the pool
+    sustains at the worst-case sequence length.
+
+    The budget is counted in serving-layout bytes (bf16 dense, exact
+    quantized codes+stats) even though this CPU bench emulates compute in
+    f32 — so the kv16 row is configured by page count (the engine's own
+    byte accounting charges its f32 debug pool at 4 B/element, which
+    would conflate the emulation dtype with the layout being modeled).
+    The quantized rows' byte accounting is dtype-independent and exact.
+    """
+    pool_bytes = PAGED_EC["total_pages"] * kvq.page_kv_bytes(
+        cfg, page_size, 16)
+    worst_pages = pages_for(PROMPT_LEN + NEW_TOKENS, page_size)
+    for kv_bits in kv_bits_list:
+        usable = pool_bytes // kvq.page_kv_bytes(cfg, page_size, kv_bits) - 1
+        slots = max(1, usable // worst_pages)
+        if kv_bits == 16:
+            ec = EngineConfig(max_slots=slots, max_len=64, prefill_batch=4,
+                              cache_mode="paged", page_size=page_size,
+                              total_pages=PAGED_EC["total_pages"])
+        else:
+            ec = EngineConfig(max_slots=slots, max_len=64, prefill_batch=4,
+                              cache_mode="paged", page_size=page_size,
+                              pool_bytes=pool_bytes, kv_bits=kv_bits)
+        yield kv_bits, pool_bytes, ec
+
+
+def run(arch="granite_3_8b", collect=None):
+    """Yield (name, us_per_token, new_tok_per_s) rows (run.py convention).
+
+    ``collect``: optional dict filled with the machine-readable stats
+    that back BENCH_engine.json.
+    """
     cfg = cb.get_smoke(arch)
     opts = ModelOpts(compute_dtype=jnp.float32, remat=False,
                      attn_chunked_min_len=1 << 30, ssd_chunk=16)
@@ -99,28 +162,63 @@ def run(arch="granite_3_8b"):
         for slots in (1, 4, 8):
             ec = EngineConfig(max_slots=slots, max_len=64, prefill_batch=4,
                               cache_mode="paged", page_size=8)
-            dt, tps, _ = bench_engine(params, cfg, opts, ec)
+            dt, tps, _, _ = bench_engine(params, cfg, opts, ec)
             yield (f"engine_w{w_bits}_slots{slots}", 1e6 / tps,
                    round(tps, 1))
         # equal-HBM A/B: 512 cache rows either as 8 fixed slot regions or
         # as 64 shared pages feeding up to 16 slots
-        dt, tps, peak = bench_engine(params, cfg, opts,
-                                     EngineConfig(**SLOT_EC))
+        dt, tps, peak, _ = bench_engine(params, cfg, opts,
+                                        EngineConfig(**SLOT_EC))
         yield (f"engine_w{w_bits}_slotcache_eqhbm_conc{peak}", 1e6 / tps,
                round(tps, 1))
-        dt, tps, peak = bench_engine(params, cfg, opts,
-                                     EngineConfig(**PAGED_EC))
+        dt, tps, peak, _ = bench_engine(params, cfg, opts,
+                                        EngineConfig(**PAGED_EC))
         yield (f"engine_w{w_bits}_pagedcache_eqhbm_conc{peak}", 1e6 / tps,
                round(tps, 1))
+        # equal-HBM kv_bits sweep (W4 weights are the serving regime; run
+        # the KV sweep once, on the quantized-weight engine)
+        if w_bits != 4:
+            continue
+        for kv_bits, pool_bytes, ec in kv_sweep_configs(cfg):
+            dt, tps, peak, stats = bench_engine(params, cfg, opts, ec,
+                                                n_requests=KV_SWEEP_REQUESTS)
+            stats.update(kv_bits=kv_bits, w_bits=w_bits,
+                         max_slots=ec.max_slots,
+                         page_size=ec.page_size,
+                         page_bytes=kvq.page_kv_bytes(cfg, ec.page_size,
+                                                      kv_bits),
+                         pool_bytes=pool_bytes)
+            if collect is not None:
+                collect.setdefault("kv_sweep", []).append(stats)
+            yield (f"engine_w{w_bits}_kv{kv_bits}_eqhbm_conc{peak}",
+                   1e6 / tps, round(tps, 1))
 
 
 def main():
     p = argparse.ArgumentParser()
     p.add_argument("--arch", default="granite_3_8b")
+    p.add_argument("--json-out", default=JSON_PATH,
+                   help="machine-readable stats path (repo root)")
     args = p.parse_args()
+    collect = {"arch": args.arch, "prompt_len": PROMPT_LEN,
+               "new_tokens": NEW_TOKENS}
     print("name,us_per_call,derived")
-    for name, us, derived in run(args.arch):
+    for name, us, derived in run(args.arch, collect=collect):
         print(f"{name},{us:.1f},{derived}")
+        collect.setdefault("rows", []).append(
+            {"name": name, "us_per_call": round(us, 1), "tok_s": derived})
+    sweep = collect.get("kv_sweep", [])
+    base = next((s for s in sweep if s["kv_bits"] == 16), None)
+    if base:
+        # ratio of *admitted* concurrency (the slot count the byte budget
+        # sustains) — mean occupancy saturates at the offered load, which
+        # would understate the admission-capacity gain the sweep measures
+        for s in sweep:
+            s["concurrency_vs_kv16"] = round(
+                s["max_slots"] / max(base["max_slots"], 1), 2)
+    with open(args.json_out, "w") as f:
+        json.dump(collect, f, indent=2)
+    print(f"# wrote {os.path.abspath(args.json_out)}")
 
 
 if __name__ == "__main__":

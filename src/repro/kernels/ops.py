@@ -149,6 +149,23 @@ def qmatmul(a: jax.Array, w_packed: jax.Array, mu: jax.Array,
     return _ref.qmatmul_ref(a, w_packed, mu, sigma, bits, out_dtype)
 
 
+def qmatmul_lut(a: jax.Array, w_packed: jax.Array, lut: jax.Array, *,
+                bits: int, out_dtype=jnp.float32,
+                use_pallas: Optional[bool] = None,
+                interpret: bool = False, **block_kw) -> jax.Array:
+    """Codebook-LUT variant of qmatmul: dequant is a per-out-channel
+    gather ``lut[code, channel]`` instead of the analytic Gaussian level
+    formula — the serving path for ``dist="empirical"`` checkpoints whose
+    levels are order statistics (no closed form).  ``lut`` is (k, N);
+    broadcast a per-tensor codebook (``EmpiricalModel.level_values``)
+    with ``jnp.broadcast_to(levels[:, None], (k, N))``."""
+    if _use_pallas(use_pallas):
+        return _qmm.qmatmul_lut(a, w_packed, lut, bits=bits,
+                                out_dtype=out_dtype, interpret=interpret,
+                                **block_kw)
+    return _ref.qmatmul_lut_ref(a, w_packed, lut, bits, out_dtype)
+
+
 def qmatmul_a8(a_codes: jax.Array, a_scale: jax.Array, w_packed: jax.Array,
                mu: jax.Array, sigma: jax.Array, *, bits: int,
                out_dtype=jnp.float32, use_pallas: Optional[bool] = None,

@@ -1,0 +1,182 @@
+"""Pallas TPU kernel: fused gather+unpack+dequant paged decode attention.
+
+The serving-side counterpart of the qmatmul kernel (DESIGN.md Sec. 2): at
+decode time the KV pool — not the weights — is the HBM roofline term, and
+with k-quantile-coded pages (models/kv_cache.py) the pool bytes drop ~2x
+(kv8) / ~3.6x (kv4).  This kernel keeps the win by never materializing a
+dense pool: per (batch, page) grid step the *scalar-prefetched* block
+table drives the BlockSpec index map, so only the pages a sequence
+actually owns are DMA'd HBM->VMEM, as packed codes; unpack (mask/shift
+for int4) and the analytic dequant
+
+    x = mu_rh + sigma_rh * Phi^{-1}((c + 1/2) / k)        (erf_inv)
+
+run on the VPU against the page tile, and an online softmax accumulates
+across the page grid dimension in VMEM scratch — the flash-decoding
+structure of ``chunked_attention`` with the dequant fused into the KV
+load.  Per-(row, head) statistics ride in the same page geometry as the
+codes, so one index map serves all six operands.
+
+Interpret mode executes the same body on CPU (tier-1 parity tests vs the
+jnp reference in ``models/attention.py``); compiled Mosaic needs TPU-
+friendly dims (page a multiple of the sublane tile, D a multiple of 128)
+— real configs (page 64, hd 128) satisfy this, smoke shapes run
+interpreted.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import pallas_compat as pc
+
+_SQRT2 = 1.4142135623730951
+_EPS = 1e-6
+NEG_INF = -1e30
+
+
+def _dequant_page(codes, mu, sigma, bits: int, k: int):
+    """(page, KV, D') codes + (page, KV) stats -> (page, KV, D) f32."""
+    if bits == 4:
+        lo = (codes & 0x0F).astype(jnp.float32)
+        hi = ((codes >> 4) & 0x0F).astype(jnp.float32)
+        c = jnp.stack([lo, hi], axis=-1)
+        c = c.reshape(*codes.shape[:-1], codes.shape[-1] * 2)
+    else:
+        c = codes.astype(jnp.float32)
+        if k == 256:  # undo int8 storage offset
+            c = c + 128.0
+    centers = jnp.clip((c + 0.5) / k, _EPS, 1.0 - _EPS)
+    z = _SQRT2 * jax.lax.erf_inv(2.0 * centers - 1.0)
+    return (mu.astype(jnp.float32)[..., None]
+            + sigma.astype(jnp.float32)[..., None] * z)
+
+
+def _kernel(bt_ref, qpos_ref, win_ref, q_ref, kc_ref, km_ref, ks_ref,
+            vc_ref, vm_ref, vs_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            bits: int, k: int, page: int, logit_cap):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+    n_pages = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)                       # (KV, G, D)
+    D = q.shape[-1]
+    kd = _dequant_page(kc_ref[0], km_ref[0], ks_ref[0], bits, k)
+    vd = _dequant_page(vc_ref[0], vm_ref[0], vs_ref[0], bits, k)
+
+    # scores: (KV, G, D) x (KV, D, page) -> (KV, G, page)
+    s = jax.lax.dot_general(
+        q * (D ** -0.5), jnp.transpose(kd, (1, 2, 0)),
+        dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)
+    if logit_cap is not None:
+        s = logit_cap * jnp.tanh(s / logit_cap)
+    rows = j * page + jax.lax.broadcasted_iota(jnp.int32, (1, 1, page), 2)
+    valid = rows <= qpos_ref[b]
+    # sliding window (traced per-layer scalar; BIG_WINDOW sentinel = global)
+    valid &= (qpos_ref[b] - rows) < win_ref[0]
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    alpha = jnp.exp(m_prev - m_new)                        # <= 1, finite
+    pexp = jnp.where(valid, jnp.exp(s - m_new[..., None]), 0.0)
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(pexp, axis=-1)
+    # (KV, G, page) x (KV, page, D) -> (KV, G, D)
+    acc_scr[...] = acc_scr[...] * alpha[..., None] + jax.lax.dot_general(
+        pexp, jnp.transpose(vd, (1, 0, 2)),
+        dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(j == n_pages - 1)
+    def _fin():
+        out = acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)[..., None]
+        o_ref[0] = out.astype(o_ref.dtype)
+
+
+BIG_WINDOW = 1 << 30
+
+
+@functools.partial(jax.jit, static_argnames=("kv_bits", "logit_cap",
+                                             "interpret"))
+def paged_quant_attention(q: jax.Array, k_codes: jax.Array, k_mu: jax.Array,
+                          k_sigma: jax.Array, v_codes: jax.Array,
+                          v_mu: jax.Array, v_sigma: jax.Array,
+                          block_tables: jax.Array, q_pos: jax.Array, *,
+                          kv_bits: int, window=None, logit_cap=None,
+                          interpret: bool = False) -> jax.Array:
+    """q (B, 1, H, D) vs coded pool pages -> (B, 1, H, D).
+
+    k/v_codes : (P, page, KV, D//2) uint8 (kv4) or (P, page, KV, D) int8.
+    k/v stats : (P, page, KV) per-(row, head) mu/sigma.
+    block_tables (B, n_pages) int32, q_pos (B,) int32; rows past q_pos
+    (sink or never-written) are masked exactly as in the dense path.
+    ``window``: causal sliding-window width — a *traced* scalar (the
+    decode scan's per-layer window, BIG_WINDOW sentinel for global), so
+    local and global layers share one compiled kernel.
+    """
+    B, _, H, D = q.shape
+    P, page, KV = k_mu.shape
+    G = H // KV
+    n_pages = block_tables.shape[1]
+    k = 2 ** kv_bits
+    qg = q.reshape(B, KV, G, D)
+    block_tables = jnp.asarray(block_tables, jnp.int32)
+    q_pos = jnp.asarray(q_pos, jnp.int32)
+    if window is None:
+        window = BIG_WINDOW
+    window = jnp.asarray(window, jnp.int32).reshape((1,))
+    Dc = k_codes.shape[-1]
+
+    def page_map(b, j, bt, qp, win):
+        return (bt[b, j], 0, 0, 0)
+
+    def stat_map(b, j, bt, qp, win):
+        return (bt[b, j], 0, 0)
+
+    def q_map(b, j, bt, qp, win):
+        return (b, 0, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(B, n_pages),
+        in_specs=[
+            pl.BlockSpec((1, KV, G, D), q_map),
+            pl.BlockSpec((1, page, KV, Dc), page_map),
+            pl.BlockSpec((1, page, KV), stat_map),
+            pl.BlockSpec((1, page, KV), stat_map),
+            pl.BlockSpec((1, page, KV, Dc), page_map),
+            pl.BlockSpec((1, page, KV), stat_map),
+            pl.BlockSpec((1, page, KV), stat_map),
+        ],
+        out_specs=pl.BlockSpec((1, KV, G, D), q_map),
+        scratch_shapes=[
+            pltpu.VMEM((KV, G), jnp.float32),
+            pltpu.VMEM((KV, G), jnp.float32),
+            pltpu.VMEM((KV, G, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel, bits=kv_bits, k=k, page=page,
+                          logit_cap=logit_cap),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, D), q.dtype),
+        compiler_params=pc.compiler_params(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=pc.interpret_mode(interpret),
+    )(block_tables, q_pos, window, qg, k_codes, k_mu, k_sigma, v_codes,
+      v_mu, v_sigma)
+    return out.reshape(B, 1, H, D)

@@ -110,6 +110,88 @@ def qmatmul(a: jax.Array, w_packed: jax.Array, mu: jax.Array,
     return out.astype(out_dtype)
 
 
+def _kernel_lut(a_ref, w_ref, lut_ref, o_ref, *, bits: int, k: int):
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = a_ref[...]
+    w_blk = w_ref[...]
+    if bits == 4:
+        lo = (w_blk & 0x0F).astype(jnp.int32)
+        hi = ((w_blk >> 4) & 0x0F).astype(jnp.int32)
+        codes = jnp.stack([lo, hi], axis=-1)
+        codes = codes.reshape(w_blk.shape[0], w_blk.shape[1] * 2)
+    else:
+        codes = w_blk.astype(jnp.int32)
+        if k == 256:  # undo int8 storage offset
+            codes = codes + 128
+
+    # Per-channel codebook gather, k select passes over the (bk, bn) tile:
+    # w[r, c] = lut[codes[r, c], c].  Avoids a (bk, bn, k) one-hot
+    # intermediate (32 MB of VMEM at k=256 for the default tiles); the VPU
+    # select is cheap relative to the MXU tile it feeds.
+    def pick(j, w):
+        row = lut_ref[pl.dslice(j, 1), :].astype(jnp.float32)   # (1, bn)
+        return jnp.where(codes == j, row, w)
+
+    w = jax.lax.fori_loop(0, k, pick,
+                          jnp.zeros(codes.shape, jnp.float32))
+    o_ref[...] += jnp.dot(a.astype(jnp.float32), w,
+                          preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "out_dtype", "bm", "bk",
+                                             "bn", "interpret"))
+def qmatmul_lut(a: jax.Array, w_packed: jax.Array, lut: jax.Array, *,
+                bits: int, out_dtype=jnp.float32, bm: int = DEFAULT_BM,
+                bk: int = DEFAULT_BK, bn: int = DEFAULT_BN,
+                interpret: bool = False) -> jax.Array:
+    """a (M, K) @ lut-dequant(w_packed) (K, N) -> (M, N).
+
+    The codebook variant of :func:`qmatmul` for codes whose levels have
+    *no* analytic form — ``dist="empirical"`` checkpoints, whose k levels
+    are order statistics of the weight population (the paper's "look-up
+    table availability" assumption).  ``lut`` is a (k, N) f32 table of
+    per-out-channel levels; per-tensor codebooks broadcast to (k, N)
+    before the call (``EmpiricalModel.level_values``).
+
+    w_packed : (K, N//2) uint8 if bits==4 else (K, N) int8 (k=256 offset).
+    """
+    M, K = a.shape
+    N = w_packed.shape[1] * 2 if bits == 4 else w_packed.shape[1]
+    k = 2 ** bits
+    if w_packed.shape[0] != K:
+        raise ValueError(f"K mismatch: a {a.shape} vs w {w_packed.shape}")
+    if lut.shape != (k, N):
+        raise ValueError(f"lut must be ({k}, {N}), got {lut.shape}")
+    bm = min(bm, M)
+    bk = min(bk, K)
+    bn = min(bn, N)
+    if M % bm or K % bk or N % bn:
+        raise ValueError(f"dims ({M},{K},{N}) not divisible by "
+                         f"({bm},{bk},{bn})")
+    wn_blk = bn // 2 if bits == 4 else bn
+    out = pl.pallas_call(
+        functools.partial(_kernel_lut, bits=bits, k=k),
+        grid=(M // bm, N // bn, K // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, wn_blk), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((k, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        compiler_params=pc.compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=pc.interpret_mode(interpret),
+    )(a, w_packed, lut)
+    return out.astype(out_dtype)
+
+
 def _kernel_a8(scale_ref, a_ref, w_ref, mu_ref, sigma_ref, o_ref, *,
                bits: int, k: int):
     kk = pl.program_id(2)

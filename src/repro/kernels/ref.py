@@ -99,6 +99,27 @@ def qmatmul_ref(a: Array, w_packed: Array, mu: Array, sigma: Array,
                    preferred_element_type=jnp.float32).astype(out_dtype)
 
 
+def qmatmul_lut_ref(a: Array, w_packed: Array, lut: Array, bits: int,
+                    out_dtype=jnp.float32) -> Array:
+    """Oracle for the codebook-LUT dequant matmul.
+
+    The codebook counterpart of the analytic dequant for level sets with
+    no closed form (empirical-CDF quantizers): a per-out-channel gather
+    ``w[i, j] = lut[code[i, j], j]``.  int8-stored codes carry the k=256
+    storage offset.
+
+    a        : (M, K) activations
+    w_packed : (K, N//2) uint8 (bits=4) or (K, N) int8 (bits=8)
+    lut      : (k, N) f32 per-out-channel levels
+    """
+    k = 2 ** bits
+    codes = packing.unpack_int4(w_packed) if bits == 4 else w_packed
+    c = codes.astype(jnp.int32) + code_offset(k)
+    w = jnp.take_along_axis(lut.astype(jnp.float32), c, axis=0)  # (K, N)
+    return jnp.dot(a.astype(jnp.float32), w,
+                   preferred_element_type=jnp.float32).astype(out_dtype)
+
+
 def qmatmul_a8_ref(a_codes: Array, a_scale: Array, w_packed: Array,
                    mu: Array, sigma: Array, bits: int,
                    out_dtype=jnp.float32) -> Array:

@@ -14,10 +14,13 @@ effective KV utilization):
         --max-slots 8 --new-tokens 32 --page-size 64
 
 The KV cache is paged by default (--cache-mode paged): sequences grow
-page by page out of a shared pool (--total-pages; default sizes the pool
-to the slot-cache HBM) and are preempted+resumed instead of evicted when
-it runs dry.  --cache-mode slot keeps the legacy fixed-region cache for
-A/B comparison; --total-pages small enough forces preemption
+page by page out of a shared pool (--total-pages or a --pool-bytes byte
+budget; default sizes the pool to the slot-cache HBM) and are
+preempted+resumed instead of evicted when it runs dry.  --kv-bits 8/4
+stores the pages as k-quantile codes + per-row stats (half / ~a third
+of the bytes, so a byte budget admits proportionally more sequences).
+--cache-mode slot keeps the legacy fixed-region cache for A/B
+comparison; --total-pages small enough forces preemption
 (--min-preemptions asserts it happened, for CI smoke).
 
 Loads (or random-inits) weights, k-quantile-quantizes them to --w-bits,
@@ -68,8 +71,15 @@ def run_engine_stream(params, cfg, opts, args) -> dict:
     ec = EngineConfig(max_slots=args.max_slots, max_len=args.max_len,
                       prefill_batch=args.prefill_batch,
                       cache_mode=args.cache_mode, page_size=args.page_size,
-                      total_pages=args.total_pages)
+                      total_pages=args.total_pages, kv_bits=args.kv_bits,
+                      pool_bytes=args.pool_bytes)
     eng = Engine(params, cfg, opts, ec)
+    if args.cache_mode == "paged":
+        sch = eng.scheduler
+        print(f"[engine] paged KV pool: {sch.total_pages} pages x "
+              f"{args.page_size} tokens at kv_bits={args.kv_bits} "
+              f"({eng.page_bytes} B/page, "
+              f"{sch.pool_bytes_total / 1024:.1f} KiB total)")
 
     # warm THIS engine's jitted steps (jit caches live on the instance):
     # compile the decode shape and EVERY prefill bucket this request set
@@ -157,7 +167,8 @@ def run_engine_stream(params, cfg, opts, args) -> dict:
 def run_closed_batch(params, cfg, opts, args) -> None:
     prompts = jax.random.randint(jax.random.PRNGKey(1),
                                  (args.batch, args.prompt_len), 0, cfg.vocab)
-    sc = serve_lib.ServeConfig(w_bits=args.w_bits, a_bits=args.a_bits)
+    sc = serve_lib.ServeConfig(w_bits=args.w_bits, a_bits=args.a_bits,
+                               w_dist=args.w_dist)
 
     out_fp = serve_lib.generate(params, cfg, opts, sc, prompts,
                                 args.new_tokens)
@@ -182,6 +193,11 @@ def main(argv=None):
     p.add_argument("--arch", required=True)
     p.add_argument("--smoke", action="store_true")
     p.add_argument("--w-bits", type=int, default=4)
+    p.add_argument("--w-dist", choices=("gaussian", "empirical"),
+                   default="gaussian",
+                   help="weight dequant levels: analytic Gaussian or the "
+                        "empirical per-tensor codebook (LUT) — match the "
+                        "checkpoint's training cfg.dist")
     p.add_argument("--a-bits", type=int, default=32)
     p.add_argument("--batch", type=int, default=4)
     p.add_argument("--prompt-len", type=int, default=16)
@@ -205,6 +221,13 @@ def main(argv=None):
     p.add_argument("--total-pages", type=int, default=None,
                    help="KV pool size; default = slot-cache-equivalent "
                         "HBM; smaller values force preemption/resume")
+    p.add_argument("--kv-bits", type=int, default=16, choices=(16, 8, 4),
+                   help="KV page bit-width: 8/4 store k-quantile codes + "
+                        "per-row stats (paged mode only)")
+    p.add_argument("--pool-bytes", type=int, default=None,
+                   help="KV pool byte budget (alternative to "
+                        "--total-pages): pages = pool_bytes // page bytes "
+                        "at the chosen --kv-bits")
     p.add_argument("--min-preemptions", type=int, default=0,
                    help="fail unless at least this many preemptions "
                         "happened (CI smoke of the preempt/resume path)")
@@ -216,7 +239,8 @@ def main(argv=None):
     params = model.init(jax.random.PRNGKey(args.seed), cfg)
 
     if args.engine:
-        sc = serve_lib.ServeConfig(w_bits=args.w_bits, a_bits=args.a_bits)
+        sc = serve_lib.ServeConfig(w_bits=args.w_bits, a_bits=args.a_bits,
+                                   w_dist=args.w_dist)
         params = serve_lib.prepare_params(params, sc)
         opts = serve_lib.make_serve_opts(opts, sc)
         run_engine_stream(params, cfg, opts, args)

@@ -152,6 +152,58 @@ def paged_decode_attention(q: Array, k_pages: Array, v_pages: Array,
     return decode_attention(q, k, v, q_pos, p)
 
 
+def paged_decode_attention_quant(q: Array, cache, block_tables: Array,
+                                 q_pos: Array, p: AttnParams, *,
+                                 kv_bits: int,
+                                 use_pallas: Optional[bool] = None,
+                                 interpret: bool = False) -> Array:
+    """Decode attention against a k-quantile-coded paged KV pool.
+
+    q            : (B, 1, H, D) current-position queries.
+    cache        : per-layer slice of the quantized pool —
+                   {"k_codes","v_codes"} (P, page, KV, D') int8/uint8 and
+                   {"k_mu","k_sigma","v_mu","v_sigma"} (P, page, KV) bf16
+                   (see models/kv_cache.py; D' = D//2 packed for 4-bit).
+    block_tables : (B, n_pages) int32 page ids; sink-page entries are
+                   masked out by position exactly as in the dense path.
+
+    On TPU this runs the fused Pallas kernel: per (batch, page) grid
+    step the block table gathers the page's code tile HBM->VMEM,
+    unpack+dequant happens on the VPU, and an online-softmax accumulates
+    across pages — the KV pool is never materialized densely.  The
+    sliding window rides as a traced scalar (the decode scan's per-layer
+    window value, BIG_WINDOW for global layers), so one compiled kernel
+    serves every layer.  Elsewhere the jnp reference gathers +
+    dequantizes and reuses ``decode_attention`` unchanged; both share
+    the codec in models/kv_cache.py, so they agree bit-for-bit on what
+    every code dequantizes to.
+    """
+    from repro.models import kv_cache as kvq
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if use_pallas:
+        from repro.kernels import paged_attn
+        return paged_attn.paged_quant_attention(
+            q, cache["k_codes"], cache["k_mu"], cache["k_sigma"],
+            cache["v_codes"], cache["v_mu"], cache["v_sigma"],
+            block_tables, q_pos, kv_bits=kv_bits, window=p.window,
+            logit_cap=p.logit_cap, interpret=interpret)
+    B = q.shape[0]
+    P, page, KV = cache["k_mu"].shape
+    n_pages = block_tables.shape[1]
+    S = n_pages * page
+
+    def gather_dequant(codes, mu, sigma):
+        c = codes[block_tables].reshape(B, S, KV, codes.shape[-1])
+        m = mu[block_tables].reshape(B, S, KV)
+        s = sigma[block_tables].reshape(B, S, KV)
+        return kvq.dequantize_kv(c, m, s, kv_bits, dtype=q.dtype)
+
+    k = gather_dequant(cache["k_codes"], cache["k_mu"], cache["k_sigma"])
+    v = gather_dequant(cache["v_codes"], cache["v_mu"], cache["v_sigma"])
+    return decode_attention(q, k, v, q_pos, p)
+
+
 def decode_attention(q: Array, k_cache: Array, v_cache: Array,
                      q_pos: Array, p: AttnParams,
                      cache_len: Optional[Array] = None) -> Array:

@@ -1,0 +1,133 @@
+"""Bit-parametric KV-cache codec (kv_bits in {16, 8, 4}).
+
+The paged KV pool is the serving HBM ceiling (the 16-vs-8 concurrency gap
+at equal HBM in EXPERIMENTS.md); this module extends the paper's k-quantile
+code + analytic-dequant argument from weights to KV pages:
+
+  * each KV row is coded **per (page row, head)**: one (mu, sigma) pair per
+    written token per KV head, stored in bf16 alongside the codes.  Row
+    granularity — not per-page aggregates — is what makes preemption/resume
+    *bit-exact in the codes domain*: a row's codes depend only on that row's
+    fresh K/V values, so the decode-time append and the resume-time
+    re-prefill of the same position produce identical codes (DESIGN.md
+    Sec. 6).
+  * codes reuse the weight-path conventions exactly (``kernels/ref.py``
+    Phi/Phi^-1 pair, ``core/packing.py`` int4 two-per-byte packing, int8
+    storage offset for k=256), so the fused paged-attention kernel shares
+    the qmatmul dequant formulation.
+  * byte accounting: ``token_kv_bytes``/``page_kv_bytes`` give the exact
+    pool bytes per token/page (codes + stats), which is what the scheduler
+    admits against — W8/W4 KV trades directly into concurrency.
+
+Attention must always read what decode wrote: prefill fake-quantizes K/V
+through this codec before attending (``lm._attn_block``), so a token's
+logits never depend on whether its KV history was built by prefill or by
+incremental decode.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing
+from repro.kernels import ref as kref
+
+Array = jax.Array
+
+KV_BITS_CHOICES = (16, 8, 4)
+
+# Per-row statistics dtype.  bf16 halves the stats overhead vs f32 (the
+# equal-HBM win at small head_dim hinges on it: at hd=16, f32 stats would
+# cap the W8 byte ratio at 1.33x); codes are computed from the *rounded*
+# stats so quantize and dequantize always agree bit-for-bit.
+STATS_DTYPE = jnp.bfloat16
+STATS_BYTES = 2
+
+
+def check_kv_bits(kv_bits: int, head_dim: int = 0) -> None:
+    if kv_bits not in KV_BITS_CHOICES:
+        raise ValueError(f"kv_bits must be one of {KV_BITS_CHOICES}, "
+                         f"got {kv_bits}")
+    if kv_bits == 4 and head_dim and head_dim % 2:
+        raise ValueError(f"kv_bits=4 packs two codes/byte along head_dim; "
+                         f"head_dim {head_dim} must be even")
+
+
+def is_quantized_cache(cache) -> bool:
+    """Whether a (paged) cache pytree holds k-quantile codes, not dense KV."""
+    return isinstance(cache, dict) and "k_codes" in cache
+
+
+def quantize_kv(x: Array, kv_bits: int):
+    """Code a block of KV rows:  x (..., KV, hd) -> (codes, mu, sigma).
+
+    codes : (..., KV, hd) int8 for kv_bits=8, (..., KV, hd//2) uint8 packed
+            for kv_bits=4 (int8 codes carry the k=256 storage offset,
+            matching the weight path).
+    mu/sigma : (..., KV) bf16 per-(row, head) statistics; codes are
+            computed against the bf16-rounded values so every later
+            dequant/requantize sees exactly the stored statistics.
+    """
+    k = 2 ** kv_bits
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1).astype(STATS_DTYPE)
+    sigma = jnp.maximum(jnp.std(xf, axis=-1), 1e-8).astype(STATS_DTYPE)
+    codes = kref.kquantile_codes_ref(
+        xf, mu.astype(jnp.float32)[..., None],
+        sigma.astype(jnp.float32)[..., None], k)
+    stored = packing.pack_int4(codes) if kv_bits == 4 else codes
+    return stored, mu, sigma
+
+
+def dequantize_kv(stored: Array, mu: Array, sigma: Array, kv_bits: int,
+                  dtype=jnp.float32) -> Array:
+    """codes (+ per-row stats) -> dense KV rows via the analytic levels."""
+    k = 2 ** kv_bits
+    codes = packing.unpack_int4(stored) if kv_bits == 4 else stored
+    return kref.kquantile_dequant_ref(
+        codes, mu.astype(jnp.float32)[..., None],
+        sigma.astype(jnp.float32)[..., None], k, dtype=dtype)
+
+
+def fake_quant_kv(x: Array, kv_bits: int):
+    """Round-trip a KV block; returns (x_dq, codes, mu, sigma).
+
+    ``x_dq`` is what attention must see (decode reads dequantized pages),
+    the rest is what the cache stores.
+    """
+    stored, mu, sigma = quantize_kv(x, kv_bits)
+    return dequantize_kv(stored, mu, sigma, kv_bits, x.dtype), stored, mu, \
+        sigma
+
+
+# --------------------------------------------------------------------------
+# Byte accounting (scheduler admission currency)
+# --------------------------------------------------------------------------
+
+def token_kv_bytes(cfg, kv_bits: int, dense_itemsize: int = 2) -> int:
+    """Exact KV-pool bytes one token occupies across all layers.
+
+    kv16 counts ``dense_itemsize`` bytes per element — 2 for the bf16
+    serving layout (the default), 4 when the pool is actually allocated in
+    f32 (the CPU-exact debug numerics; the engine passes its real pool
+    itemsize so a ``pool_bytes`` budget always bounds allocated memory).
+    Quantized layouts are dtype-independent: codes + the per-(row, head)
+    bf16 (mu, sigma) pairs for K and V.  This is the currency the
+    byte-based scheduler admits in.
+    """
+    check_kv_bits(kv_bits, cfg.head_dim)
+    hd = cfg.head_dim
+    if kv_bits == 16:
+        per_head = dense_itemsize * hd
+    elif kv_bits == 8:
+        per_head = hd + 2 * STATS_BYTES
+    else:
+        per_head = hd // 2 + 2 * STATS_BYTES
+    return 2 * cfg.n_layers * cfg.n_kv_heads * per_head     # K and V
+
+
+def page_kv_bytes(cfg, page_size: int, kv_bits: int,
+                  dense_itemsize: int = 2) -> int:
+    """Pool bytes of one page (the scheduler's allocation unit)."""
+    return page_size * token_kv_bytes(cfg, kv_bits, dense_itemsize)

@@ -25,6 +25,7 @@ from repro.configs.base import ArchConfig
 from repro.core import packing
 from repro.kernels import ref as kref
 from repro.models import attention as attn
+from repro.models import kv_cache as kvq
 from repro.models import moe as moe_lib
 from repro.models.layers import (apply_rope, dense_init, embed_init,
                                  layer_norm, rms_norm, softcap, swiglu)
@@ -49,6 +50,9 @@ class ModelOpts:
     fsdp_axes: tuple = ("data",)      # axes expert weights are FSDP-sharded on
     manual_axes: tuple = ()           # mesh axes already manual (shard_map)
     serve_w_bits: int = 16            # 4/8 => quantized serving weights
+    kv_bits: int = 16                 # 8/4 => k-quantile-coded KV cache
+                                      #   (paged serving; per-row per-head
+                                      #   stats, see models/kv_cache.py)
     moe_mode: str = "gather"          # gather: all-gather FSDP'd expert
                                       #   weights per layer (baseline);
                                       # reduce: keep d_ff sharded over data,
@@ -118,6 +122,20 @@ def materialize(w, dtype):
     bits = 4 if codes.dtype == jnp.uint8 else 8
     if bits == 4:
         codes = packing.unpack_int4(codes)
+    if "q_lut" in w:
+        # Codebook layout (dist="empirical"): levels are order statistics
+        # with no analytic form; dequant is a per-code LUT gather, the
+        # jnp formulation of kernels.qmatmul_lut.
+        idx = codes.astype(jnp.int32)
+        if bits == 8:
+            idx = idx + 128                 # undo int8 storage offset
+        lut = w["q_lut"]
+        if lut.ndim == 1:                   # per-tensor codebook (k,)
+            return lut[idx].astype(dtype)
+        # stacked per-layer codebooks (L, k) against codes (L, ...)
+        flat = lut[jnp.arange(lut.shape[0])[:, None],
+                   idx.reshape(idx.shape[0], -1)]
+        return flat.reshape(idx.shape).astype(dtype)
     return kref.kquantile_dequant_ref(codes, w["q_mu"], w["q_sigma"],
                                       2 ** bits, dtype=dtype)
 
@@ -127,31 +145,68 @@ def mm(x: Array, w) -> Array:
     return jnp.dot(x, materialize(w, x.dtype))
 
 
+def _quantize_leaf_empirical(leaf, bits: int, stacked: bool):
+    """Code one leaf against per-tensor empirical quantiles + codebook.
+
+    Stacked leaves (leading layer axis) get one codebook per layer — the
+    layer scan slices ``q_lut`` to ``(k,)`` alongside the codes.  Codes
+    reuse the weight-path storage conventions (int4 packing, int8 k=256
+    offset) so ``kernels.qmatmul_lut`` consumes them unchanged.
+    """
+    from repro.core import quantizers as Q
+    from repro.core.distributions import EmpiricalModel
+    k = 2 ** bits
+
+    def one(w):
+        m = EmpiricalModel.fit(w)
+        return Q.kquantile_quantize(w, m, k), m.level_values(k)
+
+    codes, lut = (jax.vmap(one) if stacked else lambda w: one(w))(leaf)
+    if bits == 4:
+        stored = packing.pack_int4(codes)
+    else:
+        stored = (codes - 128).astype(jnp.int8)
+    return {"q_codes": stored, "q_lut": lut.astype(jnp.float32)}
+
+
 def quantize_params_for_serving(params, bits: int, quant_filter=None,
                                 per_channel: bool = True,
+                                dist: str = "gaussian",
                                 stacked_prefixes=("layers", "enc_layers",
                                                   "dec_layers")):
-    """Replace eligible weight leaves by k-quantile code dicts (see uniq)."""
-    from repro.core.uniq import (_stats_axes, default_quant_filter,
-                                 fit_gaussian, path_str)
-    from repro.core import quantizers as Q
+    """Replace eligible weight leaves by k-quantile code dicts.
+
+    dist="gaussian" (paper-faithful): each dict is a view of a
+    ``core.uniq.QuantizedTensor`` — the single source of truth for
+    code/statistic computation — flattened to the ``{"q_codes", "q_mu",
+    "q_sigma"}`` layout the layer bodies (and the MoE shard_map wspecs)
+    dispatch on; dequant is analytic.  dist="empirical": codes are taken
+    against the per-tensor empirical CDF and the dict carries the k-level
+    codebook instead (``{"q_codes", "q_lut"}`` — the paper's "look-up
+    table availability" assumption), matching how ``cfg.dist="empirical"``
+    trains (core.uniq.transform_param).  Only int4 packing needs an even
+    trailing dim, so the skip applies at bits == 4 alone; 8-bit leaves
+    with odd last dims are quantized like any other.
+    """
+    from repro.core.uniq import (default_quant_filter, path_str,
+                                 quantize_tensor)
+    if dist not in ("gaussian", "empirical"):
+        raise ValueError(f"dist must be gaussian|empirical, got {dist!r}")
     quant_filter = quant_filter or default_quant_filter
     flat, treedef = jax.tree_util.tree_flatten_with_path(params)
     out = []
     for kp, leaf in flat:
         p = path_str(kp)
-        if not quant_filter(p, leaf) or leaf.shape[-1] % 2:
+        if not quant_filter(p, leaf) or (bits == 4 and leaf.shape[-1] % 2):
             out.append(leaf)
             continue
         stacked = any(p.startswith(pre) for pre in stacked_prefixes)
-        model = fit_gaussian(leaf, _stats_axes(leaf, per_channel, stacked))
-        codes = Q.kquantile_quantize(leaf, model, 2 ** bits,
-                                     code_dtype=jnp.int32)
-        stored = (packing.pack_int4(codes) if bits == 4
-                  else (codes - 128).astype(jnp.int8))
-        out.append({"q_codes": stored,
-                    "q_mu": model.mu.astype(jnp.float32),
-                    "q_sigma": model.sigma.astype(jnp.float32)})
+        if dist == "empirical":
+            out.append(_quantize_leaf_empirical(leaf, bits, stacked))
+            continue
+        qt = quantize_tensor(leaf, bits, per_channel=per_channel,
+                             stacked=stacked)
+        out.append({"q_codes": qt.codes, "q_mu": qt.mu, "q_sigma": qt.sigma})
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
@@ -230,7 +285,15 @@ def _window_schedule(cfg: ArchConfig) -> jnp.ndarray:
 
 def _attn_block(x, lp, cfg: ArchConfig, opts: ModelOpts, positions, window,
                 kv_out: bool = False):
-    """Self-attention sub-block on (B, S, d).  Returns (out, (k, v))."""
+    """Self-attention sub-block on (B, S, d).  Returns (out, kv).
+
+    ``kv`` (when requested) is ``(k, v)`` dense, or the k-quantile code
+    dict when ``opts.kv_bits < 16``: serving prefill then fake-quantizes
+    K/V *before* attending, so the queries see exactly the dequantized
+    rows a later incremental decode (or preemption-resume re-prefill)
+    reads from the paged pool — the codes-domain bit-exactness invariant
+    (models/kv_cache.py).
+    """
     B, S, d = x.shape
     H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     h = _norm(x, lp["attn_norm"], cfg)
@@ -242,6 +305,16 @@ def _attn_block(x, lp, cfg: ArchConfig, opts: ModelOpts, positions, window,
                   opts, "dp", None, "tp", None)
     q = apply_rope(q, positions, cfg.rope_theta)
     k = apply_rope(k, positions, cfg.rope_theta)
+    kv = None
+    if kv_out:
+        if opts.kv_bits < 16:
+            k, k_st, k_mu, k_sig = kvq.fake_quant_kv(k, opts.kv_bits)
+            v, v_st, v_mu, v_sig = kvq.fake_quant_kv(v, opts.kv_bits)
+            kv = {"k_codes": k_st, "v_codes": v_st,
+                  "k_mu": k_mu, "k_sigma": k_sig,
+                  "v_mu": v_mu, "v_sigma": v_sig}
+        else:
+            kv = (k, v)
     p = attn.AttnParams(window=window, logit_cap=cfg.attn_logit_cap,
                         causal=True)
     pos1d = positions[0]
@@ -254,7 +327,7 @@ def _attn_block(x, lp, cfg: ArchConfig, opts: ModelOpts, positions, window,
     o = shard_act(mm(o, lp["wo"]), opts, "dp", None, None)
     if cfg.post_norms:
         o = _norm(o, lp["post_attn_norm"], cfg)
-    return o, ((k, v) if kv_out else None)
+    return o, kv
 
 
 def _moe_ep_sharded(h, router_w, eg, eu, ed, mcfg, opts: ModelOpts):
@@ -299,6 +372,8 @@ def _moe_ep_sharded(h, router_w, eg, eu, ed, mcfg, opts: ModelOpts):
             the f-sharding through the int4-unpack reshape otherwise and
             replicates the dequantized tensor — measured, Perf log it2)."""
             def one(leaf):
+                if leaf.ndim < 3:   # (k,) empirical codebook: replicated
+                    return P(*([None] * leaf.ndim))
                 dims = [None, None, None]
                 if leaf.shape[0] % tp_n == 0:
                     dims[0] = "model"
@@ -578,12 +653,13 @@ def forward_prefill(params, cfg: ArchConfig, opts: ModelOpts, batch,
     logits = jnp.dot(last, materialize(_head_weight(params, cfg), last.dtype),
                      preferred_element_type=jnp.float32)
     logits = softcap(logits, cfg.final_logit_cap)
-    k, v = kvs
+    cache = kvs if isinstance(kvs, dict) else {"k": kvs[0], "v": kvs[1]}
     if pad_to and pad_to > S:
-        pad = [(0, 0), (0, 0), (0, pad_to - S), (0, 0), (0, 0)]
-        k = jnp.pad(k, pad)
-        v = jnp.pad(v, pad)
-    return logits, {"k": k, "v": v}
+        # every cache leaf is (L, B, S, ...): pad the position axis
+        cache = {name: jnp.pad(leaf, [(0, 0), (0, 0), (0, pad_to - S)]
+                               + [(0, 0)] * (leaf.ndim - 3))
+                 for name, leaf in cache.items()}
+    return logits, cache
 
 
 def init_cache(cfg: ArchConfig, batch: int, max_len: int,
@@ -601,24 +677,45 @@ def cache_specs(cfg: ArchConfig, batch: int, max_len: int,
 
 
 def init_paged_cache(cfg: ArchConfig, total_pages: int, page_size: int,
-                     dtype=jnp.bfloat16):
-    """Zeroed paged KV pool (L, total_pages, page_size, KV, hd).
+                     dtype=jnp.bfloat16, kv_bits: int = 16):
+    """Zeroed paged KV pool, bit-width-parametric.
+
+    kv_bits=16: dense {"k","v"} (L, total_pages, page_size, KV, hd).
+    kv_bits=8/4: k-quantile codes {"k_codes","v_codes"} (int8, or uint8
+    packed two-per-byte along hd for 4-bit) plus per-(row, head) bf16
+    statistics {"k_mu","k_sigma","v_mu","v_sigma"} of shape
+    (L, total_pages, page_size, KV) — see models/kv_cache.py.
 
     Page 0 is the reserved *sink*: never allocated to a sequence, it
     absorbs the writes of inactive decode rows and prefill right-padding
     (block-table entries default to 0), so scatters never need a mask.
     """
-    shape = (cfg.n_layers, total_pages, page_size, cfg.n_kv_heads,
-             cfg.head_dim)
-    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    kvq.check_kv_bits(kv_bits, cfg.head_dim)
+    L, KV, hd = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+    if kv_bits == 16:
+        shape = (L, total_pages, page_size, KV, hd)
+        return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    code_shape = (L, total_pages, page_size, KV,
+                  hd // 2 if kv_bits == 4 else hd)
+    code_dtype = packing.storage_dtype(kv_bits)
+    stat_shape = (L, total_pages, page_size, KV)
+    stats = {name: jnp.zeros(stat_shape, kvq.STATS_DTYPE)
+             for name in ("k_mu", "k_sigma", "v_mu", "v_sigma")}
+    return {"k_codes": jnp.zeros(code_shape, code_dtype),
+            "v_codes": jnp.zeros(code_shape, code_dtype), **stats}
 
 
 def cache_insert_paged(cache, prefill_cache, page_tables):
-    """Scatter a prefill KV block into the paged pool.
+    """Scatter a prefill KV block into the paged pool (any kv_bits layout).
 
-    cache         : {"k","v"} (L, total_pages, page_size, KV, hd)
-    prefill_cache : {"k","v"} (L, G, S_pad, KV, hd) from a padded batched
-                    prefill of G admitted prompts
+    cache         : pool pytree from ``init_paged_cache`` — dense
+                    {"k","v"} (L, total_pages, page_size, ...) or the
+                    codes+stats layout; every leaf has (total_pages,
+                    page_size) as axes 1-2.
+    prefill_cache : matching pytree of (L, G, S_pad, ...) leaves from a
+                    padded batched prefill of G admitted prompts (codes
+                    and stats scatter with the same page/row geometry as
+                    dense rows — stats travel with their page).
     page_tables   : (G, n_pages) int32 destination page ids covering
                     [0, n_pages * page_size); entries past a prompt's
                     allocated pages (and whole pad rows) are 0 (sink).
@@ -629,19 +726,21 @@ def cache_insert_paged(cache, prefill_cache, page_tables):
     mask ``k_pos <= t`` exposes it) keeps them invisible — the same
     argument as the slot cache's padded insert.
     """
-    page = cache["k"].shape[2]
-    L, G, s_pad = prefill_cache["k"].shape[:3]
+    ref_pool = next(iter(cache.values()))
+    page = ref_pool.shape[2]
     n_pages = page_tables.shape[1]
-    pad = n_pages * page - s_pad
     page_tables = jnp.asarray(page_tables, jnp.int32)
 
     def scatter(pool, kv):
-        kv = jnp.pad(kv, [(0, 0), (0, 0), (0, pad), (0, 0), (0, 0)])
+        L, G, s_pad = kv.shape[:3]
+        pad = n_pages * page - s_pad
+        kv = jnp.pad(kv, [(0, 0), (0, 0), (0, pad)]
+                     + [(0, 0)] * (kv.ndim - 3))
         kv = kv.reshape(L, G, n_pages, page, *kv.shape[3:])
         return pool.at[:, page_tables].set(kv.astype(pool.dtype))
 
-    return {"k": scatter(cache["k"], prefill_cache["k"]),
-            "v": scatter(cache["v"], prefill_cache["v"])}
+    return {name: scatter(cache[name], prefill_cache[name])
+            for name in cache}
 
 
 def decode_step(params, cfg: ArchConfig, opts: ModelOpts, cache, tokens,
@@ -649,8 +748,14 @@ def decode_step(params, cfg: ArchConfig, opts: ModelOpts, cache, tokens,
     """One decode step.  tokens (B, 1); positions (B,) current index.
 
     cache: slot layout {"k","v"} (L, B, S, KV, hd) when ``block_tables``
-    is None; paged layout (L, total_pages, page_size, KV, hd) with
+    is None; paged layout (leaves (L, total_pages, page_size, ...),
+    dense or k-quantile-coded — see ``init_paged_cache``) with
     ``block_tables`` (B, n_pages) int32 page indirection otherwise.
+
+    Quantized pages (``opts.kv_bits < 16``): the step codes the fresh
+    K/V row per (row, head), scatters codes + stats into the pool, then
+    attends through the fused gather+unpack+dequant paged path — the
+    row's own code is written before it is read, matching prefill.
 
     Returns (logits (B, V), updated cache).
     """
@@ -661,14 +766,17 @@ def decode_step(params, cfg: ArchConfig, opts: ModelOpts, cache, tokens,
     windows = _window_schedule(cfg)
     barange = jnp.arange(B)
     paged = block_tables is not None
+    quant = kvq.is_quantized_cache(cache)
+    if quant and not paged:
+        raise ValueError("quantized KV cache requires the paged layout")
     if paged:
-        page = cache["k"].shape[2]
+        page = next(iter(cache.values())).shape[2]
         write_page = jnp.take_along_axis(
             block_tables, (positions // page)[:, None], axis=1)[:, 0]
         write_row = positions % page
 
     def body(h, inp):
-        lp, window, k_cache, v_cache = inp
+        lp, window, kc = inp
         hn = _norm(h, lp["attn_norm"], cfg)
         q = mm(hn, lp["wq"]).reshape(B, 1, H, hd)
         k = mm(hn, lp["wk"]).reshape(B, 1, KV, hd)
@@ -677,30 +785,42 @@ def decode_step(params, cfg: ArchConfig, opts: ModelOpts, cache, tokens,
         k = apply_rope(k, pos2d, cfg.rope_theta)
         p = attn.AttnParams(window=window, logit_cap=cfg.attn_logit_cap,
                             causal=True)
-        if paged:
-            k_cache = k_cache.at[write_page, write_row].set(
-                k[:, 0].astype(k_cache.dtype))
-            v_cache = v_cache.at[write_page, write_row].set(
-                v[:, 0].astype(v_cache.dtype))
-            o = attn.paged_decode_attention(q, k_cache, v_cache,
+        kc = dict(kc)
+        if quant:
+            k_st, k_mu, k_sig = kvq.quantize_kv(k[:, 0], opts.kv_bits)
+            v_st, v_mu, v_sig = kvq.quantize_kv(v[:, 0], opts.kv_bits)
+            for name, val in (("k_codes", k_st), ("k_mu", k_mu),
+                              ("k_sigma", k_sig), ("v_codes", v_st),
+                              ("v_mu", v_mu), ("v_sigma", v_sig)):
+                kc[name] = kc[name].at[write_page, write_row].set(
+                    val.astype(kc[name].dtype))
+            o = attn.paged_decode_attention_quant(q, kc, block_tables,
+                                                  positions, p,
+                                                  kv_bits=opts.kv_bits)
+        elif paged:
+            kc["k"] = kc["k"].at[write_page, write_row].set(
+                k[:, 0].astype(kc["k"].dtype))
+            kc["v"] = kc["v"].at[write_page, write_row].set(
+                v[:, 0].astype(kc["v"].dtype))
+            o = attn.paged_decode_attention(q, kc["k"], kc["v"],
                                             block_tables, positions, p)
         else:
-            k_cache = k_cache.at[barange, positions].set(
-                k[:, 0].astype(k_cache.dtype))
-            v_cache = v_cache.at[barange, positions].set(
-                v[:, 0].astype(v_cache.dtype))
-            o = attn.decode_attention(q, k_cache, v_cache, positions, p)
+            kc["k"] = kc["k"].at[barange, positions].set(
+                k[:, 0].astype(kc["k"].dtype))
+            kc["v"] = kc["v"].at[barange, positions].set(
+                v[:, 0].astype(kc["v"].dtype))
+            o = attn.decode_attention(q, kc["k"], kc["v"], positions, p)
         o = mm(o.reshape(B, 1, H * hd), lp["wo"])
         if cfg.post_norms:
             o = _norm(o, lp["post_attn_norm"], cfg)
         h = h + o
         h = h + _ffn_block(h, lp, cfg, opts)
-        return _maybe_quant_act(h, opts), (k_cache, v_cache)
+        return _maybe_quant_act(h, opts), kc
 
-    x, (k_new, v_new) = jax.lax.scan(
-        body, x, (params["layers"], windows, cache["k"], cache["v"]))
+    x, cache_new = jax.lax.scan(
+        body, x, (params["layers"], windows, dict(cache)))
     x = _norm_final(x, params, cfg)
     logits = jnp.dot(x[:, 0], materialize(_head_weight(params, cfg), x.dtype),
                      preferred_element_type=jnp.float32)
     logits = softcap(logits, cfg.final_logit_cap)
-    return logits, {"k": k_new, "v": v_new}
+    return logits, cache_new

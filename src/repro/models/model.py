@@ -160,21 +160,25 @@ def supports_paged_cache(cfg: ArchConfig) -> bool:
 
 
 def init_paged_cache(cfg: ArchConfig, total_pages: int, page_size: int,
-                     dtype=jnp.bfloat16):
-    """Zeroed paged KV pool (L, total_pages, page_size, KV, hd); page 0
-    is the reserved sink (see lm.init_paged_cache)."""
+                     dtype=jnp.bfloat16, kv_bits: int = 16):
+    """Zeroed paged KV pool; dense (L, total_pages, page_size, KV, hd) at
+    kv_bits=16 or the k-quantile codes+stats layout at 8/4 (page 0 is the
+    reserved sink; see lm.init_paged_cache and models/kv_cache.py)."""
     if not supports_paged_cache(cfg):
         raise ValueError(f"paged cache unsupported for family {cfg.family}")
-    return lm.init_paged_cache(cfg, total_pages, page_size, dtype)
+    return lm.init_paged_cache(cfg, total_pages, page_size, dtype,
+                               kv_bits=kv_bits)
 
 
 def cache_insert_paged(cache, prefill_cache, page_tables):
-    """Scatter a batched-prefill KV block into pool pages (see
-    lm.cache_insert_paged)."""
+    """Scatter a batched-prefill KV block into pool pages (dense or
+    quantized layout; see lm.cache_insert_paged)."""
     return lm.cache_insert_paged(cache, prefill_cache, page_tables)
 
 
-def quantize_for_serving(params, bits: int, per_channel: bool = True):
+def quantize_for_serving(params, bits: int, per_channel: bool = True,
+                         dist: str = "gaussian"):
     """k-quantile-code all matmul weights for the serving path (UNIQ)."""
     return lm.quantize_params_for_serving(params, bits,
-                                          per_channel=per_channel)
+                                          per_channel=per_channel,
+                                          dist=dist)

@@ -47,9 +47,11 @@ def _param_spec(path: str, shape, cfg: ArchConfig, fsdp, mesh: Mesh,
                 expert_mode: str = "gather") -> P:
     # quantized-weight leaves inherit the parent weight's rule: q_codes has
     # the weight's shape (last dim halved for int4 — _fit re-validates);
-    # q_mu/q_sigma are (.., 1, C) stats, non-divisible dims fall replicated.
+    # q_mu/q_sigma are (.., 1, C) stats and q_lut is a (k,)/(L, k)
+    # codebook, whose non-divisible dims fall replicated.
     parts = path.split("/")
-    if parts[-1] in ("q_codes", "q_mu", "q_sigma") and len(parts) >= 2:
+    if parts[-1] in ("q_codes", "q_mu", "q_sigma", "q_lut") \
+            and len(parts) >= 2:
         path = "/".join(parts[:-1])
     if fsdp is True:
         d = "data"

@@ -6,8 +6,8 @@ and pay a host-loop step per *prompt* token.  This engine serves an open
 request stream instead (DESIGN.md Sec. 6):
 
   * **paged KV cache** (default) — one device-resident page pool
-    (L, total_pages, page_size, KV, hd); a sequence's KV grows page by
-    page through a per-slot block table (a traced (max_slots, n_pages)
+    (leaves (L, total_pages, page_size, ...)); a sequence's KV grows page
+    by page through a per-slot block table (a traced (max_slots, n_pages)
     int32 array, so growth never recompiles).  Short requests stop
     paying for ``max_len``-sized reservations, and on pool exhaustion
     the scheduler *preempts* the lowest-priority sequence (frees its
@@ -15,6 +15,13 @@ request stream instead (DESIGN.md Sec. 6):
     by re-prefilling prompt+generated — no request is ever lost
     mid-decode.  A legacy **slot** mode (fixed max_len region per slot,
     terminal eviction) is kept as the A/B baseline.
+  * **bit-parametric pages** — ``kv_bits`` in {16, 8, 4}: quantized pools
+    hold k-quantile codes + per-(row, head) statistics instead of dense
+    bf16 rows (models/kv_cache.py); prefill codes K/V before attending
+    and decode appends codes, so preemption/resume is bit-exact in the
+    codes domain.  The scheduler admits in *bytes* (``pool_bytes``), so
+    at equal HBM the kv8/kv4 pool holds ~2x/~3.6x the pages — quantized
+    KV trades directly into concurrency.
   * **batched prefill** — an admitted group runs ONE forward over the
     whole padded prompt block (``model.prefill`` with per-sequence
     ``last_idx``), then scatters its KV into pool pages
@@ -50,6 +57,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
+from repro.models import kv_cache
 from repro.models import model
 from repro.models.lm import ModelOpts
 from repro.serve.scheduler import (Request, SamplingParams, ScheduledSeq,
@@ -71,6 +79,15 @@ class EngineConfig:
     # total_pages None => max_slots * ceil(max_len/page_size) + 1: the same
     # KV HBM as the slot cache plus the reserved sink page, i.e. enough
     # that preemption only triggers when the pool is deliberately shrunk.
+    kv_bits: int = 16           # 8/4 => k-quantile-coded KV pages (paged
+                                #   mode only; models/kv_cache.py)
+    pool_bytes: Optional[int] = None
+    # byte budget for the page pool (alternative to total_pages): the pool
+    # holds pool_bytes // page_kv_bytes(cfg, page_size, kv_bits) pages —
+    # the dense kv16 page cost is charged at the dtype the pool is
+    # actually allocated in, so the budget bounds real memory — and the
+    # same budget admits ~2x the tokens at kv_bits=8, ~3.6x at 4: the
+    # equal-HBM concurrency trade the benchmark sweeps.
 
 
 @dataclasses.dataclass
@@ -122,19 +139,33 @@ class Engine:
                 f"engine serves decoder-only KV families; got {cfg.family}")
         if ec.cache_mode not in ("paged", "slot"):
             raise ValueError(f"unknown cache_mode: {ec.cache_mode!r}")
+        kv_cache.check_kv_bits(ec.kv_bits, cfg.head_dim)
+        if ec.kv_bits < 16 and ec.cache_mode != "paged":
+            raise ValueError("kv_bits < 16 requires the paged cache (the "
+                             "slot mode is the dense legacy baseline)")
+        if ec.pool_bytes is not None and ec.cache_mode != "paged":
+            raise ValueError("pool_bytes sizes the paged pool; the slot "
+                             "cache is fixed at max_slots * max_len")
         self.cfg, self.ec = cfg, ec
         self.paged = ec.cache_mode == "paged"
-        self.opts = dataclasses.replace(opts, remat=False)
+        self.opts = dataclasses.replace(opts, remat=False,
+                                        kv_bits=ec.kv_bits)
         self.params = params
         cache_dtype = jnp.float32 if opts.compute_dtype == jnp.float32 \
             else jnp.bfloat16
         if self.paged:
+            self.page_bytes = kv_cache.page_kv_bytes(
+                cfg, ec.page_size, ec.kv_bits,
+                dense_itemsize=jnp.dtype(cache_dtype).itemsize)
             self.scheduler = Scheduler(ec.max_slots, ec.prefill_batch,
                                        ec.min_bucket, ec.max_len,
                                        page_size=ec.page_size,
-                                       total_pages=ec.total_pages)
+                                       total_pages=ec.total_pages,
+                                       page_bytes=self.page_bytes,
+                                       pool_bytes=ec.pool_bytes)
             self._cache = model.init_paged_cache(
-                cfg, self.scheduler.total_pages, ec.page_size, cache_dtype)
+                cfg, self.scheduler.total_pages, ec.page_size, cache_dtype,
+                kv_bits=ec.kv_bits)
         else:
             self.scheduler = Scheduler(ec.max_slots, ec.prefill_batch,
                                        ec.min_bucket, ec.max_len)

@@ -29,8 +29,15 @@ Two KV accounting modes:
     and ``submit`` rejects requests whose worst case could not fit even an
     otherwise-empty pool, so a sole survivor can always grow to completion.
   * **slot** (legacy baseline, kept for the equal-HBM A/B benchmark): one
-    fixed ``max_len`` region per slot; a sequence that outgrows it is
-    evicted *terminally* (``complete(slot, evicted=True)``).
+    fixed ``max_len`` region per slot; a sequence that outgrows its region
+    is evicted *terminally* (``complete(slot, evicted=True)``).
+
+Pool accounting is in **bytes**: a page is still the allocation unit, but
+its cost is ``page_bytes`` (the exact codes+stats HBM of one page at the
+engine's ``kv_bits``; see ``models/kv_cache.page_kv_bytes``), and the pool
+can be sized by a byte budget (``pool_bytes``) instead of a page count —
+the same budget yields ~2x the pages at kv8, ~3.6x at kv4, which is how
+quantized KV trades directly into concurrency at equal HBM.
 """
 
 from __future__ import annotations
@@ -128,9 +135,13 @@ class Scheduler:
     def __init__(self, max_slots: int, prefill_batch: int = 4,
                  min_bucket: int = 16, max_len: int = 2048,
                  page_size: Optional[int] = None,
-                 total_pages: Optional[int] = None):
+                 total_pages: Optional[int] = None,
+                 page_bytes: int = 1,
+                 pool_bytes: Optional[int] = None):
         if max_slots < 1:
             raise ValueError("max_slots must be >= 1")
+        if page_bytes < 1:
+            raise ValueError("page_bytes must be >= 1")
         self.max_slots = max_slots
         self.prefill_batch = max(1, prefill_batch)
         self.min_bucket = min_bucket
@@ -150,16 +161,24 @@ class Scheduler:
             if page_size < 1:
                 raise ValueError("page_size must be >= 1")
             self.page_size = page_size
+            self.page_bytes = page_bytes
             self.pages_per_slot = pages_for(max_len, page_size)
             # capacity is the block-table span, a whole number of pages
             self.capacity = self.pages_per_slot * page_size
+            if total_pages is not None and pool_bytes is not None:
+                raise ValueError("give total_pages or pool_bytes, not both")
+            if total_pages is None and pool_bytes is not None:
+                # byte-budgeted pool: however many whole pages fit
+                total_pages = pool_bytes // page_bytes
             if total_pages is None:
                 # equal HBM with a slot cache of the same (slots, max_len),
                 # plus the reserved sink page
                 total_pages = max_slots * self.pages_per_slot + 1
             if total_pages < 2:
-                raise ValueError("total_pages must be >= 2 (page 0 is the "
-                                 "reserved sink)")
+                hint = (f" (pool_bytes {pool_bytes} / page_bytes "
+                        f"{page_bytes})" if pool_bytes is not None else "")
+                raise ValueError("pool must hold >= 2 pages (page 0 is the "
+                                 f"reserved sink); got {total_pages}{hint}")
             self.total_pages = total_pages
             self.usable_pages = total_pages - 1
             self._free_pages: List[int] = list(range(1, total_pages))
@@ -211,6 +230,16 @@ class Scheduler:
     @property
     def pages_in_use(self) -> int:
         return int(self._n_pages.sum()) if self.paged else 0
+
+    @property
+    def bytes_in_use(self) -> int:
+        """Pool bytes held by running sequences (page-granular)."""
+        return self.pages_in_use * self.page_bytes if self.paged else 0
+
+    @property
+    def pool_bytes_total(self) -> int:
+        """Whole-pool byte size (including the reserved sink page)."""
+        return self.total_pages * self.page_bytes if self.paged else 0
 
     @property
     def tokens_in_use(self) -> int:

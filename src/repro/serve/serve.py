@@ -27,13 +27,15 @@ class ServeConfig:
     a_bits: int = 32
     max_len: int = 2048
     temperature: float = 0.0       # 0 = greedy
+    w_dist: str = "gaussian"       # analytic levels | "empirical" codebook
+                                   #   (match the checkpoint's cfg.dist)
 
 
 def prepare_params(params, sc: ServeConfig):
     """Quantize trained weights for serving (no-op at w_bits >= 16)."""
     if sc.w_bits >= 16:
         return params
-    return model.quantize_for_serving(params, sc.w_bits)
+    return model.quantize_for_serving(params, sc.w_bits, dist=sc.w_dist)
 
 
 def make_serve_opts(opts: ModelOpts, sc: ServeConfig) -> ModelOpts:

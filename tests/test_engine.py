@@ -206,6 +206,32 @@ def test_engine_matches_generate_greedy(w_bits, rng, cpu_opts):
     np.testing.assert_array_equal(got, ref)
 
 
+@pytest.mark.parametrize("w_bits", [8, 4])
+def test_empirical_lut_serving_parity(w_bits, rng, cpu_opts):
+    """dist="empirical" checkpoints serve through the {"q_codes","q_lut"}
+    codebook layout: greedy generation over the LUT dicts must equal
+    generation over the same weights pre-dequantized to dense — the LUT
+    gather in materialize() is the only difference between the two."""
+    from repro.models import lm
+    cfg = cb.get_smoke("granite_3_8b")
+    params = model.init(rng, cfg)
+    sc = serve_lib.ServeConfig(w_bits=w_bits, w_dist="empirical")
+    pq = serve_lib.prepare_params(params, sc)
+    # every quantized leaf carries a codebook, never Gaussian stats
+    leaves = [l for l in jax.tree_util.tree_leaves(
+        pq, is_leaf=lambda x: isinstance(x, dict) and "q_codes" in x)
+        if isinstance(l, dict) and "q_codes" in l]
+    assert leaves and all("q_lut" in l and "q_mu" not in l for l in leaves)
+    dense = jax.tree_util.tree_map(
+        lambda w: lm.materialize(w, jnp.float32),
+        pq, is_leaf=lambda x: isinstance(x, dict) and "q_codes" in x)
+    toks = jax.random.randint(jax.random.PRNGKey(7), (2, 10), 0, cfg.vocab)
+    sopts = serve_lib.make_serve_opts(cpu_opts, sc)
+    out_q = serve_lib.generate(pq, cfg, sopts, sc, toks, 8)
+    out_d = serve_lib.generate(dense, cfg, sopts, sc, toks, 8)
+    np.testing.assert_array_equal(np.asarray(out_q), np.asarray(out_d))
+
+
 def test_engine_moe_family(rng, cpu_opts):
     """Slot cache + batched prefill also serves the MoE family."""
     import dataclasses

@@ -191,3 +191,105 @@ def test_uniq_noise_block_shape_invariance(block):
     o2 = un.uniq_noise_fwd(w, mu, sd, modes, e01, k=16, block_r=512,
                            block_c=1024, interpret=True)
     np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-6)
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+def test_qmatmul_lut_kernel_matches_ref(bits):
+    """Codebook-LUT dequant matmul (dist="empirical" serving path): the
+    Pallas gather kernel matches the take_along_axis oracle, and both
+    match a dense matmul over the explicitly dequantized codebook."""
+    from repro.core import packing
+    from repro.core import quantizers as Q
+    from repro.core.distributions import EmpiricalModel
+    k = 2 ** bits
+    M, K, N = 64, 128, 64
+    a = jax.random.normal(jax.random.PRNGKey(1), (M, K)) * 0.1
+    # deliberately non-Gaussian weights: the empirical codebook is exact
+    w = jax.random.normal(jax.random.PRNGKey(2), (K, N)) ** 3 * 0.03
+    em = EmpiricalModel.fit(w)
+    codes = Q.kquantile_quantize(w, em, k, code_dtype=jnp.int32)
+    stored = packing.pack_int4(codes) if bits == 4 \
+        else (codes - 128).astype(jnp.int8)
+    lut = jnp.broadcast_to(em.level_values(k)[:, None], (k, N))
+    out_r = ops.qmatmul_lut(a, stored, lut, bits=bits, use_pallas=False)
+    out_k = ops.qmatmul_lut(a, stored, lut, bits=bits, use_pallas=True,
+                            interpret=True, bm=32, bk=64, bn=32)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               atol=1e-5)
+    dense = a @ em.level_values(k)[codes]
+    np.testing.assert_allclose(np.asarray(out_r), np.asarray(dense),
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+def test_empirical_materialize_matches_lut_kernel(bits):
+    """The serving-layer LUT gather (lm.materialize on a {"q_codes",
+    "q_lut"} dict) and the qmatmul_lut kernel consume the same storage
+    layout: x @ materialize(w) must equal the kernel's output, for both
+    flat and stacked (per-layer codebook) leaves."""
+    from repro.models.lm import _quantize_leaf_empirical, materialize
+    k = 2 ** bits
+    K, N, L = 64, 32, 3
+    key = jax.random.PRNGKey(3)
+    w = jax.random.normal(key, (K, N)) ** 3 * 0.05
+    d = _quantize_leaf_empirical(w, bits, stacked=False)
+    a = jax.random.normal(jax.random.PRNGKey(4), (16, K)) * 0.1
+    lut2d = jnp.broadcast_to(d["q_lut"][:, None], (k, N))
+    out_k = ops.qmatmul_lut(a, d["q_codes"], lut2d, bits=bits,
+                            use_pallas=False)
+    out_m = a @ materialize(d, jnp.float32)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_m),
+                               atol=1e-5)
+    # stacked: one codebook per layer, sliced or gathered whole
+    ws = jax.random.normal(key, (L, K, N)) * 0.05
+    ds = _quantize_leaf_empirical(ws, bits, stacked=True)
+    assert ds["q_lut"].shape == (L, k)
+    whole = materialize(ds, jnp.float32)
+    for l in range(L):
+        sl = {"q_codes": ds["q_codes"][l], "q_lut": ds["q_lut"][l]}
+        np.testing.assert_array_equal(np.asarray(whole[l]),
+                                      np.asarray(materialize(sl,
+                                                             jnp.float32)))
+
+
+@pytest.mark.parametrize("kv_bits", [4, 8])
+@pytest.mark.parametrize("page", [4, 8])
+def test_paged_quant_attention_kernel_matches_ref(kv_bits, page):
+    """Fused gather+unpack+dequant paged decode attention: the Pallas
+    kernel (scalar-prefetched block tables driving the page DMA) matches
+    the jnp gather+dequant reference on ragged positions."""
+    from repro.models import attention as attn
+    from repro.models import kv_cache as kvq
+    B, S, KV, G, hd = 3, 24, 2, 2, 16
+    H = KV * G
+    n_pages = S // page
+    k = jax.random.normal(jax.random.PRNGKey(0), (B, S, KV, hd))
+    v = jax.random.normal(jax.random.PRNGKey(1), (B, S, KV, hd)) * 0.5
+    q = jax.random.normal(jax.random.PRNGKey(2), (B, 1, H, hd))
+    k_st, k_mu, k_sig = kvq.quantize_kv(k, kv_bits)
+    v_st, v_mu, v_sig = kvq.quantize_kv(v, kv_bits)
+
+    def paged(x):  # (B, S, ...) -> (B * n_pages + 1, page, ...) pool
+        pool = jnp.zeros((B * n_pages + 1, page) + x.shape[2:], x.dtype)
+        return pool.at[1:].set(
+            x.reshape(B * n_pages, page, *x.shape[2:]))
+
+    cache = {"k_codes": paged(k_st), "v_codes": paged(v_st),
+             "k_mu": paged(k_mu), "k_sigma": paged(k_sig),
+             "v_mu": paged(v_mu), "v_sigma": paged(v_sig)}
+    tables = jnp.arange(1, B * n_pages + 1,
+                        dtype=jnp.int32).reshape(B, n_pages)
+    q_pos = jnp.array([2, S // 2, S - 1], jnp.int32)
+    # window rides as a traced scalar (per-layer scan value in serving):
+    # cover global (None -> BIG_WINDOW sentinel) and a narrow local window
+    for window in (None, 7):
+        p = attn.AttnParams(window=window, logit_cap=30.0)
+        out_r = attn.paged_decode_attention_quant(q, cache, tables, q_pos,
+                                                  p, kv_bits=kv_bits,
+                                                  use_pallas=False)
+        out_k = attn.paged_decode_attention_quant(q, cache, tables, q_pos,
+                                                  p, kv_bits=kv_bits,
+                                                  use_pallas=True,
+                                                  interpret=True)
+        np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                                   atol=1e-5)

@@ -1,0 +1,305 @@
+"""Quantized paged KV cache: codec round-trips, attention parity across
+page_size x kv_bits, scheduler byte accounting, and engine-level
+preempt/resume token parity at kv_bits=8 (DESIGN.md Sec. 6, quantized
+page pool)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import base as cb
+from repro.models import attention as attn
+from repro.models import kv_cache as kvq
+from repro.models import lm, model
+from repro.serve.engine import Engine, EngineConfig, Request, SamplingParams
+from repro.serve.scheduler import Scheduler
+
+
+def _req(uid, n, vocab=256, seed=None, **kw):
+    rng = np.random.default_rng(uid if seed is None else seed)
+    return Request(uid=uid, prompt=rng.integers(0, vocab, n).astype(np.int32),
+                   sampling=SamplingParams(**kw))
+
+
+# ---------------------------------------------------------------------------
+# Codec
+# ---------------------------------------------------------------------------
+
+class TestKVCodec:
+    @pytest.mark.parametrize("kv_bits", [8, 4])
+    def test_round_trip_error_bounded(self, kv_bits):
+        x = jax.random.normal(jax.random.PRNGKey(0), (3, 24, 2, 16))
+        st, mu, sigma = kvq.quantize_kv(x, kv_bits)
+        xdq = kvq.dequantize_kv(st, mu, sigma, kv_bits, jnp.float32)
+        err = float(jnp.mean(jnp.abs(xdq - x)))
+        # k-quantile of ~N(0,1) rows: mean |err| ~ sigma/k up to tail bins
+        assert err < (0.02 if kv_bits == 8 else 0.25)
+
+    def test_more_bits_is_tighter(self):
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 2, 16))
+        errs = {}
+        for kv_bits in (8, 4):
+            st, mu, sigma = kvq.quantize_kv(x, kv_bits)
+            xdq = kvq.dequantize_kv(st, mu, sigma, kv_bits, jnp.float32)
+            errs[kv_bits] = float(jnp.mean(jnp.abs(xdq - x)))
+        assert errs[8] < errs[4]
+
+    @pytest.mark.parametrize("kv_bits", [8, 4])
+    def test_exact_code_round_trip(self, kv_bits):
+        """Codes are a fixed point: requantizing the dequantized rows
+        against the *stored* statistics reproduces every code exactly —
+        the codes-domain invariant preemption/resume relies on."""
+        from repro.core import packing
+        from repro.kernels import ref as kref
+        x = jax.random.normal(jax.random.PRNGKey(2), (2, 24, 2, 16)) * 0.5
+        st, mu, sigma = kvq.quantize_kv(x, kv_bits)
+        xdq = kvq.dequantize_kv(st, mu, sigma, kv_bits, jnp.float32)
+        codes = packing.unpack_int4(st) if kv_bits == 4 else st
+        again = kref.kquantile_codes_ref(
+            xdq, mu.astype(jnp.float32)[..., None],
+            sigma.astype(jnp.float32)[..., None], 2 ** kv_bits)
+        assert bool(jnp.all(codes == again))
+
+    def test_stats_are_bf16_per_row_per_head(self):
+        x = jax.random.normal(jax.random.PRNGKey(3), (2, 8, 4, 16))
+        st, mu, sigma = kvq.quantize_kv(x, 8)
+        assert mu.shape == (2, 8, 4) and sigma.shape == (2, 8, 4)
+        assert mu.dtype == kvq.STATS_DTYPE
+        assert st.shape == x.shape and st.dtype == jnp.int8
+
+    def test_int4_packs_head_dim(self):
+        x = jax.random.normal(jax.random.PRNGKey(4), (2, 8, 2, 16))
+        st, _, _ = kvq.quantize_kv(x, 4)
+        assert st.shape == (2, 8, 2, 8) and st.dtype == jnp.uint8
+
+    def test_rejects_bad_bits_and_odd_head_dim(self):
+        with pytest.raises(ValueError):
+            kvq.check_kv_bits(2)
+        with pytest.raises(ValueError):
+            kvq.check_kv_bits(4, head_dim=17)
+        kvq.check_kv_bits(8, head_dim=17)   # int8 needs no packing
+
+    def test_token_bytes_ordering(self):
+        cfg = cb.get_smoke("granite_3_8b")
+        b16, b8, b4 = (kvq.token_kv_bytes(cfg, b) for b in (16, 8, 4))
+        assert b16 > b8 > b4
+        # the equal-HBM win: >= 1.5x tokens at kv8, more at kv4
+        assert b16 / b8 >= 1.5
+        assert b16 / b4 >= 2.5
+
+    def test_dense_itemsize_scales_kv16_only(self):
+        # an f32-allocated debug pool is charged at 4 B/element; the
+        # quantized layouts (codes + bf16 stats) are dtype-independent
+        cfg = cb.get_smoke("granite_3_8b")
+        assert kvq.token_kv_bytes(cfg, 16, dense_itemsize=4) \
+            == 2 * kvq.token_kv_bytes(cfg, 16)
+        for b in (8, 4):
+            assert kvq.token_kv_bytes(cfg, b, dense_itemsize=4) \
+                == kvq.token_kv_bytes(cfg, b)
+
+
+# ---------------------------------------------------------------------------
+# Paged attention parity (cache init + insert + gather/dequant path)
+# ---------------------------------------------------------------------------
+
+def _build_quant_pool(cfg, k, v, page_size, kv_bits):
+    """Insert (B, S) KV rows into a quantized pool via the real cache
+    pipeline (init + cache_insert_paged); returns (per-layer cache slice,
+    block_tables)."""
+    B, S = k.shape[:2]
+    n_pages = -(-S // page_size)
+    total = B * n_pages + 1
+    cache = lm.init_paged_cache(cfg, total, page_size, jnp.float32,
+                                kv_bits=kv_bits)
+    k_st, k_mu, k_sig = kvq.quantize_kv(k, kv_bits)
+    v_st, v_mu, v_sig = kvq.quantize_kv(v, kv_bits)
+    prefill_cache = {"k_codes": k_st[None], "v_codes": v_st[None],
+                     "k_mu": k_mu[None], "k_sigma": k_sig[None],
+                     "v_mu": v_mu[None], "v_sigma": v_sig[None]}
+    tables = np.arange(1, B * n_pages + 1,
+                       dtype=np.int32).reshape(B, n_pages)
+    cache = lm.cache_insert_paged(cache, prefill_cache, jnp.asarray(tables))
+    layer0 = {name: leaf[0] for name, leaf in cache.items()}
+    return layer0, jnp.asarray(tables)
+
+
+@pytest.mark.parametrize("page_size", [4, 8])
+@pytest.mark.parametrize("kv_bits", [8, 4])
+def test_paged_quant_attention_parity(page_size, kv_bits):
+    """Quantized paged attention == dense attention over the fake-quantized
+    rows (same codes, same dequant — tight), and within tolerance of the
+    unquantized rows (codec error only — loose, kv4 looser than kv8)."""
+    import dataclasses
+    cfg = dataclasses.replace(cb.get_smoke("granite_3_8b"), n_layers=1)
+    B, S, KV, G, hd = 3, 16, cfg.n_kv_heads, 2, cfg.head_dim
+    H = KV * G
+    k = jax.random.normal(jax.random.PRNGKey(0), (B, S, KV, hd))
+    v = jax.random.normal(jax.random.PRNGKey(1), (B, S, KV, hd))
+    q = jax.random.normal(jax.random.PRNGKey(2), (B, 1, H, hd))
+    q_pos = jnp.array([3, 9, 15], jnp.int32)
+    p = attn.AttnParams()
+
+    cache, tables = _build_quant_pool(cfg, k, v, page_size, kv_bits)
+    out_q = attn.paged_decode_attention_quant(q, cache, tables, q_pos, p,
+                                              kv_bits=kv_bits,
+                                              use_pallas=False)
+
+    kdq, *_ = kvq.fake_quant_kv(k, kv_bits)
+    vdq, *_ = kvq.fake_quant_kv(v, kv_bits)
+    out_dq = attn.decode_attention(q, kdq, vdq, q_pos, p)
+    np.testing.assert_allclose(np.asarray(out_q), np.asarray(out_dq),
+                               atol=2e-5)
+
+    out_dense = attn.decode_attention(q, k, v, q_pos, p)
+    tol = 0.08 if kv_bits == 8 else 0.45
+    assert float(jnp.max(jnp.abs(out_q - out_dense))) < tol
+
+
+def test_quant_prefill_matches_decode_codes():
+    """The bit-exactness invariant at the model level: a batched prefill
+    of a prompt produces the same pool codes as feeding the same tokens
+    through incremental decode steps."""
+    cfg = cb.get_smoke("granite_3_8b")
+    import dataclasses
+    from repro.models.lm import ModelOpts
+    opts = ModelOpts(compute_dtype=jnp.float32, remat=False,
+                     attn_chunked_min_len=1 << 30, kv_bits=8)
+    params = model.init(jax.random.PRNGKey(0), cfg)
+    S, page = 8, 4
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, S), 0, cfg.vocab)
+
+    _, pre = lm.forward_prefill(params, cfg, opts, {"tokens": toks})
+    cache_a = lm.init_paged_cache(cfg, 3, page, jnp.float32, kv_bits=8)
+    cache_a = lm.cache_insert_paged(cache_a, pre,
+                                    jnp.asarray([[1, 2]], jnp.int32))
+
+    cache_b = lm.init_paged_cache(cfg, 3, page, jnp.float32, kv_bits=8)
+    bt = jnp.asarray([[1, 2]], jnp.int32)
+    for t in range(S):
+        _, cache_b = lm.decode_step(params, cfg, opts, cache_b,
+                                    toks[:, t:t + 1],
+                                    jnp.asarray([t], jnp.int32),
+                                    block_tables=bt)
+    for name in ("k_codes", "v_codes", "k_mu", "k_sigma", "v_mu", "v_sigma"):
+        a = np.asarray(cache_a[name][:, 1:3])      # the written pages
+        b = np.asarray(cache_b[name][:, 1:3])
+        np.testing.assert_array_equal(a, b, err_msg=name)
+
+
+# ---------------------------------------------------------------------------
+# Scheduler byte accounting
+# ---------------------------------------------------------------------------
+
+class TestByteAccounting:
+    def test_pool_bytes_sizes_page_count(self):
+        s = Scheduler(max_slots=4, page_size=8, max_len=32,
+                      page_bytes=1024, pool_bytes=10 * 1024)
+        assert s.total_pages == 10 and s.usable_pages == 9
+        assert s.pool_bytes_total == 10 * 1024
+
+    def test_cheaper_pages_mean_more_pages(self):
+        budget = 64 * 1024
+        s16 = Scheduler(max_slots=4, page_size=8, max_len=32,
+                        page_bytes=2048, pool_bytes=budget)
+        s8 = Scheduler(max_slots=4, page_size=8, max_len=32,
+                       page_bytes=1280, pool_bytes=budget)
+        assert s16.total_pages == 32 and s8.total_pages == 51
+        assert s8.total_pages / s16.total_pages >= 1.5
+
+    def test_bytes_in_use_tracks_pages(self):
+        s = Scheduler(max_slots=2, prefill_batch=2, min_bucket=8,
+                      max_len=32, page_size=8, page_bytes=100,
+                      pool_bytes=1000)
+        s.submit(_req(0, 12, max_new_tokens=4))     # prompt -> 2 pages
+        s.schedule()
+        assert s.pages_in_use == 2 and s.bytes_in_use == 200
+
+    def test_rejects_both_budgets(self):
+        with pytest.raises(ValueError):
+            Scheduler(max_slots=2, page_size=8, max_len=32,
+                      total_pages=9, pool_bytes=1024)
+
+    def test_rejects_degenerate_byte_pool(self):
+        with pytest.raises(ValueError):
+            Scheduler(max_slots=2, page_size=8, max_len=32,
+                      page_bytes=1024, pool_bytes=1024)   # 1 page: sink only
+
+    def test_engine_pool_scales_with_kv_bits(self, rng, cpu_opts):
+        cfg = cb.get_smoke("granite_3_8b")
+        params = model.init(rng, cfg)
+        # the engine charges its dense pool at the dtype it actually
+        # allocates (f32 under cpu_opts), so a pool_bytes budget bounds
+        # real memory; state the budget in the same currency
+        budget = 65 * kvq.page_kv_bytes(cfg, 8, 16, dense_itemsize=4)
+        pools = {}
+        for kv_bits in (16, 8, 4):
+            eng = Engine(params, cfg, cpu_opts,
+                         EngineConfig(max_slots=2, max_len=64,
+                                      prefill_batch=2, page_size=8,
+                                      pool_bytes=budget, kv_bits=kv_bits))
+            pools[kv_bits] = eng.scheduler.total_pages
+        assert pools[16] == 65
+        assert pools[8] / pools[16] >= 1.5
+        assert pools[4] / pools[16] >= 2.5
+
+
+# ---------------------------------------------------------------------------
+# Engine: quantized pages end-to-end
+# ---------------------------------------------------------------------------
+
+def test_engine_rejects_quantized_slot_mode(rng, cpu_opts):
+    cfg = cb.get_smoke("granite_3_8b")
+    params = model.init(rng, cfg)
+    with pytest.raises(ValueError):
+        Engine(params, cfg, cpu_opts,
+               EngineConfig(max_slots=2, max_len=32, cache_mode="slot",
+                            kv_bits=8))
+
+
+@pytest.mark.parametrize("kv_bits", [8, 4])
+def test_engine_quantized_kv_serves(kv_bits, rng, cpu_opts):
+    """Quantized pages serve an overlapping stream: every request
+    completes at full length, nothing is ever evicted."""
+    cfg = cb.get_smoke("granite_3_8b")
+    params = model.init(rng, cfg)
+    ec = EngineConfig(max_slots=3, max_len=48, prefill_batch=2, min_bucket=8,
+                      cache_mode="paged", page_size=8, kv_bits=kv_bits)
+    eng = Engine(params, cfg, cpu_opts, ec)
+    reqs = [_req(i, 4 + (3 * i) % 9, vocab=cfg.vocab, max_new_tokens=3 + i % 4)
+            for i in range(6)]
+    outs = eng.generate(reqs)
+    assert len(outs) == 6
+    for r, o in zip(reqs, outs):
+        assert o.uid == r.uid
+        assert len(o.token_ids) == r.sampling.max_new_tokens
+        assert o.finish_reason == "length"
+
+
+def test_engine_preempt_resume_token_parity_kv8(rng, cpu_opts):
+    """The acceptance case: at --kv-bits 8 a forced preemption/resume
+    round-trip reproduces the unpreempted token stream bit-exactly (the
+    resume re-prefill recreates the identical page codes), greedy and
+    sampled."""
+    cfg = cb.get_smoke("granite_3_8b")
+    params = model.init(rng, cfg)
+    S0, n_new = 8, 24
+    tight = EngineConfig(max_slots=2, max_len=64, prefill_batch=2,
+                         min_bucket=8, cache_mode="paged", page_size=8,
+                         total_pages=7, kv_bits=8)
+    roomy = EngineConfig(max_slots=2, max_len=64, prefill_batch=2,
+                         min_bucket=8, cache_mode="paged", page_size=8,
+                         kv_bits=8)
+    for temp in (0.0, 0.7):
+        reqs = [_req(i, S0, vocab=cfg.vocab, max_new_tokens=n_new,
+                     temperature=temp, seed=50 + i) for i in range(2)]
+        eng = Engine(params, cfg, cpu_opts, tight)
+        outs = eng.generate(reqs)
+        assert eng.n_preemptions >= 1
+        assert all(o.finish_reason == "length" for o in outs)
+        victim = max(outs, key=lambda o: o.n_preempts)
+        assert victim.n_preempts >= 1
+        solo = Engine(params, cfg, cpu_opts, roomy)
+        ref = solo.generate([reqs[victim.uid]])[0]
+        assert ref.n_preempts == 0
+        assert victim.token_ids == ref.token_ids
