@@ -23,6 +23,18 @@ of the bytes, so a byte budget admits proportionally more sequences).
 comparison; --total-pages small enough forces preemption
 (--min-preemptions asserts it happened, for CI smoke).
 
+--prefix-cache turns on codes-domain prefix caching with chunked
+prefill (DESIGN.md Sec. 7): admission attaches pool pages that already
+hold a prompt's prefix instead of re-prefilling them, with
+copy-on-write on divergence.  --prefill-chunk N prefills prompts N
+pages at a time interleaved with decode (chunked prefill without the
+cache).  --shared-prefix S prepends one fixed S-token system prompt to
+every request so the stream actually shares prefixes;
+--min-cache-hit-pages / --min-cow-copies assert the hit and COW paths
+ran (CI smoke).  Every stream quantity — prompt tokens, lengths,
+arrivals AND per-request sampling seeds — derives from the single
+--seed, so a run is replayable end to end.
+
 Loads (or random-inits) weights, k-quantile-quantizes them to --w-bits,
 and serves synthetic prompts; the closed-batch path also reports greedy
 agreement with the bf16 model.
@@ -56,23 +68,32 @@ def run_engine_stream(params, cfg, opts, args) -> dict:
     """
     rng = np.random.default_rng(args.seed)
     n = args.requests
+    sys_prompt = rng.integers(0, cfg.vocab, size=args.shared_prefix,
+                              dtype=np.int64).astype(np.int32)
     lens = rng.integers(max(2, args.prompt_len // 2), args.prompt_len + 1,
                         size=n)
     arrivals = np.cumsum(rng.exponential(1.0 / args.rate, size=n))
+    # per-request sampling seeds derive from --seed too: the whole stream
+    # (prompts, lengths, arrivals, sample paths) replays from one number
+    seeds = rng.integers(0, 2 ** 31 - 1, size=n)
     reqs = [Request(uid=i,
-                    prompt=rng.integers(0, cfg.vocab, size=int(lens[i]),
-                                        dtype=np.int64).astype(np.int32),
+                    prompt=np.concatenate([
+                        sys_prompt,
+                        rng.integers(0, cfg.vocab, size=int(lens[i]),
+                                     dtype=np.int64).astype(np.int32)]),
                     sampling=SamplingParams(
                         temperature=args.temperature,
                         max_new_tokens=args.new_tokens,
-                        seed=int(i)))
+                        seed=int(seeds[i])))
             for i in range(n)]
 
     ec = EngineConfig(max_slots=args.max_slots, max_len=args.max_len,
                       prefill_batch=args.prefill_batch,
                       cache_mode=args.cache_mode, page_size=args.page_size,
                       total_pages=args.total_pages, kv_bits=args.kv_bits,
-                      pool_bytes=args.pool_bytes)
+                      pool_bytes=args.pool_bytes,
+                      prefix_cache=args.prefix_cache,
+                      prefill_chunk=args.prefill_chunk)
     eng = Engine(params, cfg, opts, ec)
     if args.cache_mode == "paged":
         sch = eng.scheduler
@@ -92,6 +113,9 @@ def run_engine_stream(params, cfg, opts, args) -> dict:
             seen.add(b)
             eng.generate([Request(uid=-1 - len(seen), prompt=r.prompt.copy(),
                                   sampling=SamplingParams(max_new_tokens=2))])
+    # warmup prompts must not pre-seed the prefix cache: hits below are
+    # earned by the stream itself, not inherited from compile warming
+    eng.flush_prefix_cache()
     eng.reset_stats()
 
     outs = []
@@ -124,6 +148,7 @@ def run_engine_stream(params, cfg, opts, args) -> dict:
         "ttft_mean_s": float(np.mean(ttfts)) if ttfts else 0.0,
         "ttft_p50_s": _percentile(ttfts, 50),
         "ttft_p95_s": _percentile(ttfts, 95),
+        "ttft_p99_s": _percentile(ttfts, 99),
         "latency_p50_s": _percentile(lats, 50),
         "decode_steps": eng.n_decode_steps,
         "prefill_calls": eng.n_prefill_calls,
@@ -131,6 +156,7 @@ def run_engine_stream(params, cfg, opts, args) -> dict:
         "evicted": eng.scheduler.n_evicted,
         "preemptions": eng.n_preemptions,
         "kv_utilization": eng.kv_utilization,
+        **eng.stats(),
     }
     print(f"[engine] {stats['requests']} requests "
           f"({stats['prompt_tokens']} prompt + {new_tokens} new tokens) "
@@ -153,6 +179,25 @@ def run_engine_stream(params, cfg, opts, args) -> dict:
                   f"preempt/resume and completed")
         assert not any(o.finish_reason == "evicted" for o in outs), \
             "paged mode must never evict terminally"
+    if args.prefix_cache:
+        hit_rate = stats["cache_hits"] / max(stats["cache_lookups"], 1)
+        print(f"[engine] prefix cache: {stats['cache_hits']}/"
+              f"{stats['cache_lookups']} admissions hit "
+              f"({hit_rate * 100:.0f}%), {stats['cache_hit_pages']} pages "
+              f"attached ({stats['cache_hit_tokens']} tokens), "
+              f"{stats['cow_copies']} copy-on-writes, "
+              f"{stats['cache_evictions']} LRU evictions, "
+              f"{stats['cached_pages']} pages cached at end")
+    if args.min_cache_hit_pages and \
+            stats["cache_hit_pages"] < args.min_cache_hit_pages:
+        raise SystemExit(
+            f"expected >= {args.min_cache_hit_pages} cache-hit pages, saw "
+            f"{stats['cache_hit_pages']} — prefix-cache hit path not "
+            f"exercised")
+    if args.min_cow_copies and stats["cow_copies"] < args.min_cow_copies:
+        raise SystemExit(
+            f"expected >= {args.min_cow_copies} copy-on-writes, saw "
+            f"{stats['cow_copies']} — COW divergence path not exercised")
     if args.min_preemptions and stats["preemptions"] < args.min_preemptions:
         raise SystemExit(
             f"expected >= {args.min_preemptions} preemptions, saw "
@@ -228,9 +273,25 @@ def main(argv=None):
                    help="KV pool byte budget (alternative to "
                         "--total-pages): pages = pool_bytes // page bytes "
                         "at the chosen --kv-bits")
+    p.add_argument("--prefix-cache", action="store_true",
+                   help="codes-domain prefix caching over pool pages "
+                        "(implies chunked prefill; paged mode only)")
+    p.add_argument("--prefill-chunk", type=int, default=None,
+                   help="prefill chunk size in pages: prompts prefill "
+                        "chunk by chunk interleaved with decode (paged "
+                        "mode; default 1 when --prefix-cache is on)")
+    p.add_argument("--shared-prefix", type=int, default=0,
+                   help="prepend one fixed system prompt of this many "
+                        "tokens to every request (prefix-cache workload)")
     p.add_argument("--min-preemptions", type=int, default=0,
                    help="fail unless at least this many preemptions "
                         "happened (CI smoke of the preempt/resume path)")
+    p.add_argument("--min-cache-hit-pages", type=int, default=0,
+                   help="fail unless at least this many prefix-cache "
+                        "pages were attached (CI smoke of the hit path)")
+    p.add_argument("--min-cow-copies", type=int, default=0,
+                   help="fail unless at least this many copy-on-writes "
+                        "happened (CI smoke of the divergence path)")
     args = p.parse_args(argv)
 
     cfg = cb.get_smoke(args.arch) if args.smoke else cb.get(args.arch)

@@ -204,6 +204,67 @@ def paged_decode_attention_quant(q: Array, cache, block_tables: Array,
     return decode_attention(q, k, v, q_pos, p)
 
 
+def paged_prefill_attention(q: Array, k_pages: Array, v_pages: Array,
+                            block_tables: Array, q_pos: Array,
+                            p: AttnParams) -> Array:
+    """Multi-token (chunked) prefill attention against a paged KV pool.
+
+    q            : (B, C, H, D) one chunk of prompt queries.
+    k/v_pages    : (P, page, KV, D) page pool; the chunk's own rows must
+                   already be scattered in (write-before-read).
+    block_tables : (B, n_pages) page ids; sink entries masked by position.
+    q_pos        : (C,) absolute positions of the chunk's tokens.
+
+    The gathered view is position-contiguous (page j of the table covers
+    positions [j*page, (j+1)*page)), so ``full_attention``'s causal
+    ``k_pos <= q_pos`` mask makes the chunk see exactly the rows a whole
+    prefill of the same prefix would: earlier chunks' pages, plus this
+    chunk's freshly written rows; later rows (other sequences' content in
+    a partially-shared page, sink garbage) are masked to -inf.
+    """
+    B = q.shape[0]
+    _, page, KV, D = k_pages.shape
+    n_pages = block_tables.shape[1]
+    Sk = n_pages * page
+    k = k_pages[block_tables].reshape(B, Sk, KV, D)
+    v = v_pages[block_tables].reshape(B, Sk, KV, D)
+    k_pos = jnp.arange(Sk, dtype=jnp.int32)
+    return full_attention(q, k.astype(q.dtype), v.astype(q.dtype),
+                          q_pos, k_pos, p)
+
+
+def paged_prefill_attention_quant(q: Array, cache, block_tables: Array,
+                                  q_pos: Array, p: AttnParams, *,
+                                  kv_bits: int) -> Array:
+    """Chunked-prefill attention against a k-quantile-coded paged pool.
+
+    Gathers + dequantizes the block-table row densely and defers to
+    ``full_attention`` — exactly what the whole-prefill path sees after
+    ``fake_quant_kv``, so chunked and whole prefill agree in the codes
+    domain: the *stored* codes+stats are byte-identical (tier-1 pinned);
+    the attention outputs themselves may differ by reduction-order ulps
+    where the two paths reduce over different padded key widths.  The
+    chunk length is one page or a few, so the dense gather is small; the
+    fused Pallas path stays a decode-only optimization.
+    """
+    from repro.models import kv_cache as kvq
+    B = q.shape[0]
+    _, page, KV = cache["k_mu"].shape
+    n_pages = block_tables.shape[1]
+    Sk = n_pages * page
+
+    def gather_dequant(codes, mu, sigma):
+        c = codes[block_tables].reshape(B, Sk, KV, codes.shape[-1])
+        m = mu[block_tables].reshape(B, Sk, KV)
+        s = sigma[block_tables].reshape(B, Sk, KV)
+        return kvq.dequantize_kv(c, m, s, kv_bits, dtype=q.dtype)
+
+    k = gather_dequant(cache["k_codes"], cache["k_mu"], cache["k_sigma"])
+    v = gather_dequant(cache["v_codes"], cache["v_mu"], cache["v_sigma"])
+    k_pos = jnp.arange(Sk, dtype=jnp.int32)
+    return full_attention(q, k, v, q_pos, k_pos, p)
+
+
 def decode_attention(q: Array, k_cache: Array, v_cache: Array,
                      q_pos: Array, p: AttnParams,
                      cache_len: Optional[Array] = None) -> Array:

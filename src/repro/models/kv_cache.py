@@ -102,6 +102,44 @@ def fake_quant_kv(x: Array, kv_bits: int):
 
 
 # --------------------------------------------------------------------------
+# Page identity and copy-on-write (prefix cache, DESIGN.md Sec. 7)
+# --------------------------------------------------------------------------
+
+def clone_pages(cache, src, dst):
+    """Copy pool pages ``src`` onto ``dst`` across every cache leaf.
+
+    This is the copy-on-write primitive behind prefix sharing: codes and
+    their per-row stats travel together, so the clone is exact in the
+    codes domain.  ``src``/``dst`` are (N,) int32 page ids into the pool
+    axis (axis 1 of each (L, P, page, ...) leaf); padding a batch with
+    (0, 0) sink self-copies is harmless.
+    """
+    src = jnp.asarray(src, jnp.int32)
+    dst = jnp.asarray(dst, jnp.int32)
+    return {name: leaf.at[:, dst].set(leaf[:, src])
+            for name, leaf in cache.items()}
+
+
+def page_fingerprint(cache, page: int) -> str:
+    """Host-side content hash of one pool page across all layers/leaves.
+
+    For quantized caches this digests the exact integer code bytes plus
+    the bf16 stats — the full codes-domain identity of the page.  Tests
+    use it to pin that a prefix-cache hit serves byte-identical KV to a
+    cold prefill of the same tokens.
+    """
+    import hashlib
+
+    import numpy as np
+
+    h = hashlib.sha256()
+    for name in sorted(cache):
+        h.update(name.encode())
+        h.update(np.asarray(jax.device_get(cache[name][:, page])).tobytes())
+    return h.hexdigest()
+
+
+# --------------------------------------------------------------------------
 # Byte accounting (scheduler admission currency)
 # --------------------------------------------------------------------------
 

@@ -743,6 +743,92 @@ def cache_insert_paged(cache, prefill_cache, page_tables):
             for name in cache}
 
 
+def prefill_chunk(params, cfg: ArchConfig, opts: ModelOpts, cache, tokens,
+                  positions, write_pages, write_rows, block_tables,
+                  last_idx):
+    """Chunked prefill: run one sequence's next C prompt tokens against
+    (and into) the paged pool (DESIGN.md Sec. 7).
+
+    tokens       : (1, C) the chunk's token ids (right-padded; pad rows
+                   compute garbage that lands in the sink).
+    positions    : (C,) absolute positions of the chunk's rows (pad rows
+                   continue past the prompt).
+    write_pages / write_rows : (C,) pool destination of each row's KV —
+                   page id and in-page row; pad rows point at the sink
+                   page 0 (and shared pages must have been copy-on-written
+                   by the scheduler before the call).
+    block_tables : (1, n_pages) the sequence's full block-table row.
+    last_idx     : () int32 index of the prompt's last token *within the
+                   chunk* (meaningful on the final chunk — its logits seed
+                   sampling exactly like whole-prefill's ``last_idx``).
+
+    Returns (logits (1, V) at ``last_idx``, updated pool).
+
+    Each layer scatters the chunk's fresh KV (codes + stats when
+    ``opts.kv_bits < 16``) into the pool *before* attending, then attends
+    over the gathered block-table row under the causal mask — the same
+    write-before-read discipline as ``decode_step``, so a chunk sees
+    earlier chunks' pages (including prefix-cache hits) plus its own rows,
+    and produces bit-identical codes to a whole prefill of the same
+    prompt: a row's codes depend only on that row's K/V, attention inputs
+    match because masked rows contribute exact zeros, and the codec is
+    shared (models/kv_cache.py).
+    """
+    B, C = tokens.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    x = _embed_tokens(params, cfg, opts, tokens)          # (B, C, d)
+    pos2d = jnp.broadcast_to(positions[None], (B, C))
+    windows = _window_schedule(cfg)
+    quant = kvq.is_quantized_cache(cache)
+    write_pages = jnp.asarray(write_pages, jnp.int32)
+    write_rows = jnp.asarray(write_rows, jnp.int32)
+
+    def body(h, inp):
+        lp, window, kc = inp
+        hn = _norm(h, lp["attn_norm"], cfg)
+        q = mm(hn, lp["wq"]).reshape(B, C, H, hd)
+        k = mm(hn, lp["wk"]).reshape(B, C, KV, hd)
+        v = mm(hn, lp["wv"]).reshape(B, C, KV, hd)
+        q = apply_rope(q, pos2d, cfg.rope_theta)
+        k = apply_rope(k, pos2d, cfg.rope_theta)
+        p = attn.AttnParams(window=window, logit_cap=cfg.attn_logit_cap,
+                            causal=True)
+        kc = dict(kc)
+        if quant:
+            k_st, k_mu, k_sig = kvq.quantize_kv(k[0], opts.kv_bits)
+            v_st, v_mu, v_sig = kvq.quantize_kv(v[0], opts.kv_bits)
+            for name, val in (("k_codes", k_st), ("k_mu", k_mu),
+                              ("k_sigma", k_sig), ("v_codes", v_st),
+                              ("v_mu", v_mu), ("v_sigma", v_sig)):
+                kc[name] = kc[name].at[write_pages, write_rows].set(
+                    val.astype(kc[name].dtype))
+            o = attn.paged_prefill_attention_quant(q, kc, block_tables,
+                                                   positions, p,
+                                                   kv_bits=opts.kv_bits)
+        else:
+            kc["k"] = kc["k"].at[write_pages, write_rows].set(
+                k[0].astype(kc["k"].dtype))
+            kc["v"] = kc["v"].at[write_pages, write_rows].set(
+                v[0].astype(kc["v"].dtype))
+            o = attn.paged_prefill_attention(q, kc["k"], kc["v"],
+                                             block_tables, positions, p)
+        o = mm(o.reshape(B, C, H * hd), lp["wo"])
+        if cfg.post_norms:
+            o = _norm(o, lp["post_attn_norm"], cfg)
+        h = h + o
+        h = h + _ffn_block(h, lp, cfg, opts)
+        return _maybe_quant_act(h, opts), kc
+
+    x, cache_new = jax.lax.scan(
+        body, x, (params["layers"], windows, dict(cache)))
+    x = _norm_final(x, params, cfg)
+    last = x[:, jnp.clip(last_idx, 0, C - 1)]             # (B, d)
+    logits = jnp.dot(last, materialize(_head_weight(params, cfg), last.dtype),
+                     preferred_element_type=jnp.float32)
+    logits = softcap(logits, cfg.final_logit_cap)
+    return logits, cache_new
+
+
 def decode_step(params, cfg: ArchConfig, opts: ModelOpts, cache, tokens,
                 positions, block_tables=None):
     """One decode step.  tokens (B, 1); positions (B,) current index.

@@ -23,7 +23,7 @@ __all__ = ["ModelOpts", "init", "loss_fn", "prefill", "decode",
            "cache_specs", "init_cache", "quantize_for_serving",
            "supports_slot_cache", "init_slot_cache", "cache_insert",
            "supports_paged_cache", "init_paged_cache",
-           "cache_insert_paged"]
+           "cache_insert_paged", "prefill_chunk"]
 
 
 def init(rng: jax.Array, cfg: ArchConfig) -> Any:
@@ -174,6 +174,19 @@ def cache_insert_paged(cache, prefill_cache, page_tables):
     """Scatter a batched-prefill KV block into pool pages (dense or
     quantized layout; see lm.cache_insert_paged)."""
     return lm.cache_insert_paged(cache, prefill_cache, page_tables)
+
+
+def prefill_chunk(params, cfg: ArchConfig, opts: ModelOpts, cache, tokens,
+                  positions, write_pages, write_rows, block_tables,
+                  last_idx):
+    """Run one sequence's next chunk of prompt tokens against (and into)
+    the paged pool — the chunked-prefill step behind prefix caching and
+    TTFT smoothing (see lm.prefill_chunk)."""
+    if not supports_paged_cache(cfg):
+        raise ValueError(
+            f"chunked prefill unsupported for family {cfg.family}")
+    return lm.prefill_chunk(params, cfg, opts, cache, tokens, positions,
+                            write_pages, write_rows, block_tables, last_idx)
 
 
 def quantize_for_serving(params, bits: int, per_channel: bool = True,

@@ -1,7 +1,7 @@
 """Optimizers: SGD(+momentum) and AdamW, with per-layer freeze masks
 (UNIQ gradual schedule), gradient clipping, LR schedules, and optional
 int8-quantized momentum (beyond-paper; lets the 1T-param cell fit —
-DESIGN.md Sec. 8).
+DESIGN.md Sec. 9).
 
 The paper fine-tunes with SGD, lr 1e-4, momentum 0.9, weight decay 1e-4,
 reducing the LR as noise is injected ("to compensate for noisier

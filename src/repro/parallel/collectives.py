@@ -1,5 +1,5 @@
 """Custom collectives: UNIQ-compressed cross-pod gradient synchronisation
-(beyond-paper, DESIGN.md Sec. 8).
+(beyond-paper, DESIGN.md Sec. 9).
 
 The `pod` mesh axis is pure data parallelism over DCN — the slowest link in
 the system.  Standard DP syncs gradients with a bf16/f32 all-reduce

@@ -34,6 +34,16 @@ request stream instead (DESIGN.md Sec. 6):
     per-slot *arrays* traced into the step, and sample keys are folded by
     (seed, position) — never by slot or batch — so a resumed sequence's
     sample stream continues exactly where preemption cut it.
+  * **chunked prefill + prefix caching** (``prefill_chunk`` /
+    ``prefix_cache``, DESIGN.md Sec. 7) — instead of one whole padded
+    prefill at admission, a prompt is prefilled page-chunk by page-chunk
+    (one fixed (1, chunk) jit shape), interleaved with decode steps so
+    running decodes never stall behind a long prompt.  With the prefix
+    cache on, admission attaches pages already holding the prompt's
+    prefix (radix lookup over token-id page chunks; exact in the codes
+    domain) and prefill starts after the hit; shared pages are
+    copy-on-written before any write (``clone_pages``), and completed
+    prompts' pages are registered for future hits.
 
 Fixed jit shapes: the decode step always sees (max_slots, 1) tokens (plus
 the block-table array in paged mode); the prefill sees (prefill_batch,
@@ -88,6 +98,13 @@ class EngineConfig:
     # actually allocated in, so the budget bounds real memory — and the
     # same budget admits ~2x the tokens at kv_bits=8, ~3.6x at 4: the
     # equal-HBM concurrency trade the benchmark sweeps.
+    prefix_cache: bool = False  # radix prefix cache over pool pages (paged
+                                #   mode; implies chunked prefill so hits
+                                #   can skip the cached prefix)
+    prefill_chunk: Optional[int] = None
+    # pages per prefill chunk (paged mode): prompts prefill chunk-by-chunk
+    # interleaved with decode steps instead of one whole padded prefill.
+    # None with prefix_cache=True defaults to 1 page per chunk.
 
 
 @dataclasses.dataclass
@@ -146,8 +163,18 @@ class Engine:
         if ec.pool_bytes is not None and ec.cache_mode != "paged":
             raise ValueError("pool_bytes sizes the paged pool; the slot "
                              "cache is fixed at max_slots * max_len")
+        if (ec.prefix_cache or ec.prefill_chunk is not None) \
+                and ec.cache_mode != "paged":
+            raise ValueError("prefix_cache / prefill_chunk require the "
+                             "paged cache")
+        if ec.prefill_chunk is not None and ec.prefill_chunk < 1:
+            raise ValueError("prefill_chunk must be >= 1 page")
         self.cfg, self.ec = cfg, ec
         self.paged = ec.cache_mode == "paged"
+        self.chunked = self.paged and (ec.prefix_cache
+                                       or ec.prefill_chunk is not None)
+        self.chunk_tokens = (ec.prefill_chunk or 1) * ec.page_size \
+            if self.paged else 0
         self.opts = dataclasses.replace(opts, remat=False,
                                         kv_bits=ec.kv_bits)
         self.params = params
@@ -162,7 +189,8 @@ class Engine:
                                        page_size=ec.page_size,
                                        total_pages=ec.total_pages,
                                        page_bytes=self.page_bytes,
-                                       pool_bytes=ec.pool_bytes)
+                                       pool_bytes=ec.pool_bytes,
+                                       prefix_cache=ec.prefix_cache)
             self._cache = model.init_paged_cache(
                 cfg, self.scheduler.total_pages, ec.page_size, cache_dtype,
                 kv_bits=ec.kv_bits)
@@ -178,6 +206,7 @@ class Engine:
         self._topks = np.zeros((M,), np.int32)
         self._seeds = np.zeros((M,), np.int32)
         self._slots: dict[int, Sequence] = {}        # active slot -> seq
+        self._prefilling: dict[int, Sequence] = {}   # mid-chunked-prefill
         self.n_decode_steps = 0
         self.n_prefill_calls = 0
         self.n_prefill_tokens = 0   # prefill *work* (resumes re-pay)
@@ -209,12 +238,29 @@ class Engine:
             keys = _fold_keys(seeds, last_idx)
             return _sample_batch(logits, keys, temps, topks), kv
 
+        def chunk_fn(params, cache, tokens, positions, write_pages,
+                     write_rows, block_tables, last_idx, last_pos, temps,
+                     topks, seeds):
+            logits, cache = model.prefill_chunk(
+                params, cfg_, opts_, cache, tokens, positions, write_pages,
+                write_rows, block_tables, last_idx)
+            # fold at the prompt's absolute last position: the sampled
+            # first token matches whole-prefill (and preempt/resume) bit
+            # for bit, whichever chunking produced it
+            keys = _fold_keys(seeds, last_pos)
+            return _sample_batch(logits, keys, temps, topks), cache
+
+        def copy_fn(cache, src, dst):
+            return kv_cache.clone_pages(cache, src, dst)
+
         self._decode_step = jax.jit(
             decode_paged if self.paged else decode_slot, donate_argnums=(1,))
         self._prefill_step = jax.jit(prefill_fn)
         self._cache_insert = jax.jit(
             model.cache_insert_paged if self.paged else model.cache_insert,
             donate_argnums=(0,))
+        self._chunk_step = jax.jit(chunk_fn, donate_argnums=(1,))
+        self._copy_pages = jax.jit(copy_fn, donate_argnums=(0,))
 
     # -- request side ------------------------------------------------------
 
@@ -236,6 +282,32 @@ class Engine:
         self.scheduler.n_completed = 0
         self.scheduler.n_evicted = 0
         self.scheduler.n_preemptions = 0
+        self.scheduler.n_cache_lookups = 0
+        self.scheduler.n_cache_hits = 0
+        self.scheduler.n_cache_hit_tokens = 0
+        self.scheduler.n_cache_hit_pages = 0
+        self.scheduler.n_cow_copies = 0
+        self.scheduler.n_cache_evictions = 0
+
+    def flush_prefix_cache(self) -> int:
+        """Drop every prefix-cache registration (pages return to the free
+        list unless still shared with a running sequence).  Benchmarks
+        call this after warmup so hits are earned, not inherited."""
+        return self.scheduler.flush_prefix_cache()
+
+    def stats(self) -> dict:
+        """Scheduler/engine counters for perf reports and CI assertions."""
+        s = self.scheduler
+        return {
+            "preemptions": s.n_preemptions,
+            "cache_lookups": s.n_cache_lookups,
+            "cache_hits": s.n_cache_hits,
+            "cache_hit_tokens": s.n_cache_hit_tokens,
+            "cache_hit_pages": s.n_cache_hit_pages,
+            "cow_copies": s.n_cow_copies,
+            "cache_evictions": s.n_cache_evictions,
+            "cached_pages": s.cached_pages,
+        }
 
     @property
     def has_work(self) -> bool:
@@ -248,7 +320,12 @@ class Engine:
     @property
     def kv_utilization(self) -> float:
         """Mean fraction of held KV page rows holding valid tokens across
-        the decode steps so far (paged mode; 0.0 before any step)."""
+        the decode steps so far (paged mode; 0.0 before any step).
+
+        Tokens are counted per sequence but pages are distinct physical
+        pages, so with the prefix cache on this can exceed 1.0: shared
+        pages serve several sequences' tokens from one set of rows —
+        the over-commit is exactly the sharing win."""
         if not self._util_page_tokens:
             return 0.0
         return self._util_tokens / self._util_page_tokens
@@ -322,6 +399,87 @@ class Engine:
                 finished.append(self._complete(ss.slot, done))
         return finished
 
+    # -- chunked prefill ---------------------------------------------------
+
+    def _apply_cow(self) -> None:
+        """Replay the scheduler's pending copy-on-write pairs on the
+        device pool (src pages cloned onto fresh dst pages).  Batches are
+        padded to a power of two with (0, 0) sink self-copies, bounding
+        the compile count; dst pages are always freshly allocated, so no
+        pair ever chains off another's destination."""
+        if not self.paged:
+            return
+        copies = self.scheduler.take_cow_copies()
+        if not copies:
+            return
+        n = 1
+        while n < len(copies):
+            n *= 2
+        src = np.zeros((n,), np.int32)
+        dst = np.zeros((n,), np.int32)
+        for i, (s, d) in enumerate(copies):
+            src[i], dst[i] = s, d
+        self._cache = self._copy_pages(self._cache, jnp.asarray(src),
+                                       jnp.asarray(dst))
+
+    def _advance_prefill(self, slot: int) -> List[RequestOutput]:
+        """Run one prompt chunk for a mid-prefill sequence.  The final
+        chunk samples the first token (folded at the prompt's last
+        position, exactly like whole prefill) and activates the slot."""
+        seq = self._prefilling[slot]
+        prompt = seq.full_prompt
+        a = seq.prefill_progress
+        b = min(a + self.chunk_tokens, prompt.size)
+        # shared pages this chunk writes into must be copied first
+        for vslot, _vseq in self.scheduler.prepare_chunk_writes(slot, a, b):
+            self._clear_slot(vslot)
+        self._apply_cow()
+        C = self.chunk_tokens
+        valid = b - a
+        toks = np.zeros((1, C), np.int32)
+        toks[0, :valid] = prompt[a:b]
+        positions = (a + np.arange(C)).astype(np.int32)
+        page = self.ec.page_size
+        row = np.asarray(self.scheduler.block_tables[slot])
+        write_pages = np.zeros((C,), np.int32)   # pad rows -> sink page 0
+        write_rows = np.zeros((C,), np.int32)
+        write_pages[:valid] = row[positions[:valid] // page]
+        write_rows[:valid] = positions[:valid] % page
+        sp = seq.request.sampling
+        tok, self._cache = self._chunk_step(
+            self.params, self._cache, jnp.asarray(toks),
+            jnp.asarray(positions), jnp.asarray(write_pages),
+            jnp.asarray(write_rows), jnp.asarray(row[None]),
+            jnp.asarray(valid - 1, jnp.int32),
+            jnp.asarray([prompt.size - 1], jnp.int32),
+            jnp.asarray([sp.temperature], jnp.float32),
+            jnp.asarray([sp.top_k], jnp.int32),
+            jnp.asarray([sp.seed], jnp.int32))
+        self.n_prefill_calls += 1
+        self.n_prefill_tokens += valid
+        seq.prefill_progress = b
+        if b < prompt.size:
+            return []
+        # final chunk: publish the full prompt pages, activate the slot
+        self.scheduler.on_prefill_complete(slot)
+        seq.prefill_progress = None
+        del self._prefilling[slot]
+        first = int(np.asarray(tok)[0])
+        if seq.first_token_time is None:
+            seq.first_token_time = time.perf_counter()
+            self.n_prompt_tokens += int(seq.request.prompt.size)
+        seq.generated.append(first)
+        self._slots[slot] = seq
+        self._positions[slot] = prompt.size
+        self._cur_tok[slot] = first
+        self._temps[slot] = sp.temperature
+        self._topks[slot] = sp.top_k
+        self._seeds[slot] = sp.seed
+        done = self._finish_reason(slot)
+        if done:
+            return [self._complete(slot, done)]
+        return []
+
     # -- decode ------------------------------------------------------------
 
     def _decode_active(self) -> List[RequestOutput]:
@@ -329,10 +487,18 @@ class Engine:
             self._util_tokens += self.scheduler.tokens_in_use
             self._util_page_tokens += (self.scheduler.pages_in_use
                                        * self.ec.page_size)
+            block_tables = self.scheduler.block_tables
+            if self._prefilling:
+                # mid-prefill slots are inactive in the decode step, but
+                # it still scatters their (zero) row-0 write — point those
+                # rows at the sink so real (possibly shared) pages are
+                # never touched
+                block_tables = block_tables.copy()
+                block_tables[list(self._prefilling)] = 0
             next_tok, self._cache = self._decode_step(
                 self.params, self._cache, jnp.asarray(self._cur_tok),
                 jnp.asarray(self._positions),
-                jnp.asarray(self.scheduler.block_tables),
+                jnp.asarray(block_tables),
                 jnp.asarray(self._temps), jnp.asarray(self._topks),
                 jnp.asarray(self._seeds))
         else:
@@ -366,6 +532,7 @@ class Engine:
 
     def _clear_slot(self, slot: int) -> None:
         self._slots.pop(slot, None)
+        self._prefilling.pop(slot, None)
         self._positions[slot] = 0
         self._cur_tok[slot] = 0
         self._temps[slot] = 0.0
@@ -387,20 +554,41 @@ class Engine:
     # -- main loop ---------------------------------------------------------
 
     def step(self) -> List[RequestOutput]:
-        """One engine iteration: admit every admissible prefill group,
-        grow/preempt pages for the coming decode writes (paged mode), then
-        advance all active slots one decode step."""
+        """One engine iteration: admit every admissible prefill group
+        (chunked mode only claims slots/pages — compute is spread over
+        later steps), advance one prompt chunk per mid-prefill slot,
+        grow/preempt/copy pages for the coming decode writes (paged
+        mode), then advance all active slots one decode step."""
         finished: List[RequestOutput] = []
         while True:
             group = self.scheduler.schedule()
             if not group:
                 break
-            finished.extend(self._admit(group))
+            if self.chunked:
+                now = time.perf_counter()
+                for ss in group:
+                    ss.seq.admit_time = now
+                    ss.seq.prefill_progress = ss.seq.cache_hit_tokens
+                    self._prefilling[ss.slot] = ss.seq
+            else:
+                finished.extend(self._admit(group))
+        if self._prefilling:
+            # one chunk for EVERY mid-prefill slot, oldest first: the
+            # decode stall per step stays bounded by
+            # n_prefilling * chunk_tokens (the chunk size is the policy
+            # knob), while a whole admission wave advances together
+            # instead of serializing one sequence per step
+            for slot in sorted(self._prefilling,
+                               key=lambda s: self._prefilling[s].order):
+                if slot in self._prefilling:  # not preempted by a peer
+                    finished.extend(self._advance_prefill(slot))
         if self.paged and self._slots:
-            for slot, _seq in self.scheduler.ensure_decode_pages():
+            for slot, _seq in self.scheduler.ensure_decode_pages(
+                    writing=set(self._slots)):
                 # sequence went back to the waiting queue with its tokens;
                 # only the device-side slot state is dropped here
                 self._clear_slot(slot)
+            self._apply_cow()
         if self._slots:
             finished.extend(self._decode_active())
         return finished

@@ -1,4 +1,4 @@
-"""Request scheduler for the continuous-batching engine (DESIGN.md Sec. 6).
+"""Request scheduler for the continuous-batching engine (DESIGN.md Sec. 6–7).
 
 Pure host-side bookkeeping — no jax. The engine owns the device state
 (KV cache, jitted steps); the scheduler decides *which* request goes
@@ -38,6 +38,28 @@ engine's ``kv_bits``; see ``models/kv_cache.page_kv_bytes``), and the pool
 can be sized by a byte budget (``pool_bytes``) instead of a page count —
 the same budget yields ~2x the pages at kv8, ~3.6x at kv4, which is how
 quantized KV trades directly into concurrency at equal HBM.
+
+With ``prefix_cache=True`` (paged mode only) pages become *shared*:
+
+  * every usable page carries a refcount; a slot's block-table row holds
+    one reference per entry and ``serve/prefix_cache.PrefixCache`` holds
+    one reference per registered page,
+  * admission looks the prompt up in the radix index and attaches the
+    matching pages instead of re-prefilling them (the hit is capped at
+    ``len(prompt) - 1`` — at least one token must run to produce logits),
+  * a write into a page with refcount > 1 triggers copy-on-write: the
+    writer swaps in a fresh page and the engine replays the pending
+    (src, dst) device copies (``take_cow_copies``) before the step runs,
+  * a sequence's full prompt pages are registered when its prefill
+    completes; the partially-filled tail page (and pages grown during
+    decode) are registered when the slot is released, so a sequence never
+    copy-on-writes against its own registration,
+  * on pool pressure the allocator reclaims least-recently-used cache-only
+    pages before preempting running sequences.
+
+Sharing is *exact*, not approximate: pages hold integer k-quantile codes
+that are a deterministic function of the token prefix, so an index hit
+serves bit-identical KV to what a cold prefill would write.
 """
 
 from __future__ import annotations
@@ -45,9 +67,11 @@ from __future__ import annotations
 import bisect
 import dataclasses
 from collections import deque
-from typing import Deque, Dict, List, Optional, Tuple
+from typing import Deque, Dict, List, Optional, Set, Tuple
 
 import numpy as np
+
+from repro.serve.prefix_cache import PrefixCache
 
 
 @dataclasses.dataclass(frozen=True)
@@ -81,6 +105,11 @@ class Sequence:
     re-prefills ``full_prompt`` (original prompt + generated so far) and
     sampling continues exactly where it left off — sample keys are folded
     by (seed, position), never by slot or batch.
+
+    ``prefill_progress`` is the chunked-prefill cursor: the number of
+    prompt KV rows already written this admission (None once decoding).
+    ``cache_hit_tokens`` is where this admission's prefill starts — the
+    prefix served from the cache.
     """
     request: Request
     order: int                            # submission index = FCFS priority
@@ -88,6 +117,8 @@ class Sequence:
     first_token_time: Optional[float] = None
     admit_time: float = 0.0
     n_preempts: int = 0
+    prefill_progress: Optional[int] = None
+    cache_hit_tokens: int = 0
 
     @property
     def full_prompt(self) -> np.ndarray:
@@ -137,7 +168,8 @@ class Scheduler:
                  page_size: Optional[int] = None,
                  total_pages: Optional[int] = None,
                  page_bytes: int = 1,
-                 pool_bytes: Optional[int] = None):
+                 pool_bytes: Optional[int] = None,
+                 prefix_cache: bool = False):
         if max_slots < 1:
             raise ValueError("max_slots must be >= 1")
         if page_bytes < 1:
@@ -156,7 +188,17 @@ class Scheduler:
         self.n_completed = 0
         self.n_evicted = 0
         self.n_preemptions = 0
+        self.n_cache_lookups = 0
+        self.n_cache_hits = 0
+        self.n_cache_hit_tokens = 0
+        self.n_cache_hit_pages = 0
+        self.n_cow_copies = 0
+        self.n_cache_evictions = 0
 
+        if not self.paged and prefix_cache:
+            raise ValueError("prefix_cache requires paged KV "
+                             "(page_size must be set)")
+        self.prefix_cache: Optional[PrefixCache] = None
         if self.paged:
             if page_size < 1:
                 raise ValueError("page_size must be >= 1")
@@ -182,12 +224,20 @@ class Scheduler:
             self.total_pages = total_pages
             self.usable_pages = total_pages - 1
             self._free_pages: List[int] = list(range(1, total_pages))
+            # per-page reference counts: block-table entries + the prefix
+            # cache each hold one reference; 0 <=> on the free list
+            self._ref = np.zeros((total_pages,), np.int32)
             # block tables: (max_slots, pages_per_slot) int32, row-owned by
             # the running slot; 0 = sink. Handed to the jitted decode step
             # as a traced array every iteration.
             self.block_tables = np.zeros((max_slots, self.pages_per_slot),
                                          np.int32)
             self._n_pages = np.zeros((max_slots,), np.int32)
+            if prefix_cache:
+                self.prefix_cache = PrefixCache(page_size)
+            # (src, dst) device copies owed before the next cache write;
+            # the engine drains these via take_cow_copies()
+            self._cow_pending: List[Tuple[int, int]] = []
         else:
             self.capacity = max_len
 
@@ -229,7 +279,20 @@ class Scheduler:
 
     @property
     def pages_in_use(self) -> int:
-        return int(self._n_pages.sum()) if self.paged else 0
+        """Distinct pool pages referenced by running sequences (shared
+        pages count once — this is actual HBM occupancy)."""
+        if not self.paged:
+            return 0
+        pages: Set[int] = set()
+        for slot in self._running:
+            held = int(self._n_pages[slot])
+            pages.update(int(p) for p in self.block_tables[slot, :held])
+        return len(pages)
+
+    @property
+    def cached_pages(self) -> int:
+        """Pages currently registered in the prefix cache."""
+        return self.prefix_cache.n_pages if self.prefix_cache else 0
 
     @property
     def bytes_in_use(self) -> int:
@@ -246,6 +309,16 @@ class Scheduler:
         """Valid KV rows held by running sequences (utilization numerator)."""
         return sum(s.next_write_pos for s in self._running.values())
 
+    @property
+    def available_pages(self) -> int:
+        """Pages obtainable right now: free plus cache-reclaimable."""
+        if not self.paged:
+            return 0
+        n = len(self._free_pages)
+        if self.prefix_cache is not None:
+            n += self.prefix_cache.count_reclaimable(self._ref)
+        return n
+
     def running(self) -> Dict[int, Sequence]:
         return dict(self._running)
 
@@ -261,8 +334,10 @@ class Scheduler:
         one padded-length bucket; FCFS, the head of the queue pins the
         bucket for the round. In paged mode admission additionally charges
         the pool for each prompt's pages and stops when it cannot pay
-        (head-of-line blocking keeps FCFS exact). Returns [] when nothing
-        is admissible."""
+        (head-of-line blocking keeps FCFS exact). With the prefix cache
+        on, cached prefix pages are attached (refcounted) instead of
+        allocated, and ``seq.cache_hit_tokens`` tells the engine where to
+        start prefilling. Returns [] when nothing is admissible."""
         if not self._waiting or not self._free:
             return []
 
@@ -276,22 +351,51 @@ class Scheduler:
             if self._bucket(seq) != head_bucket:
                 kept.append(seq)
                 continue
+            hit, shared = 0, []
             if self.paged:
-                need = pages_for(seq.full_prompt.size, self.page_size)
+                prompt = seq.full_prompt
+                need = pages_for(prompt.size, self.page_size)
                 worst = pages_for(seq.request.prompt.size
                                   + seq.request.sampling.max_new_tokens,
                                   self.page_size)
+                if self.prefix_cache is not None:
+                    self.n_cache_lookups += 1
+                    raw_hit, hit_pages = self.prefix_cache.lookup(prompt)
+                    # at least one token must run to produce logits
+                    hit = min(raw_hit, prompt.size - 1)
+                    if hit > 0:
+                        shared = [int(p) for p in
+                                  hit_pages[:pages_for(hit, self.page_size)]]
+                    # attach before the availability check so the shared
+                    # pages stop counting as reclaimable
+                    for p in shared:
+                        self._ref[p] += 1
+                fresh = need - len(shared)
                 # one page of decode-growth headroom (when the sequence
                 # will grow at all): admitting into an exactly-full pool
                 # would preempt the newcomer at the next page boundary and
-                # re-pay its whole prefill
-                if need + min(1, worst - need) > len(self._free_pages):
+                # re-pay its whole prefill. A partially-hit tail page also
+                # reserves one page for its copy-on-write.
+                cow_reserve = 1 if hit % self.page_size else 0
+                if fresh + cow_reserve + min(1, worst - need) \
+                        > self.available_pages:
+                    for p in shared:      # roll back the attach
+                        self._ref[p] -= 1
                     kept.append(seq)
                     blocked = True    # FCFS: don't let younger traffic pass
                     continue
             slot = self._free.pop(0)
             if self.paged:
-                self._alloc_pages(slot, need)
+                if shared:
+                    self.block_tables[slot, :len(shared)] = shared
+                    self._n_pages[slot] = len(shared)
+                self._alloc_pages(slot, fresh)
+                seq.cache_hit_tokens = hit
+                if hit > 0:
+                    self.n_cache_hits += 1
+                    self.n_cache_hit_tokens += hit
+                    self.n_cache_hit_pages += len(shared)
+                    self.prefix_cache.touch(shared)
             self._running[slot] = seq
             group.append(ScheduledSeq(seq, slot, head_bucket))
         self._waiting = kept + self._waiting   # preserve FCFS order
@@ -308,21 +412,75 @@ class Scheduler:
             rows[i, :take] = self.block_tables[ss.slot, :take]
         return rows
 
-    # -- paged decode growth / preemption ---------------------------------
+    # -- paged page pool ---------------------------------------------------
+
+    def _take_page(self) -> Optional[int]:
+        """Pop a free page (refcount set to 1), reclaiming LRU cache-only
+        pages when the free list is dry. None when truly exhausted."""
+        if not self._free_pages and self.prefix_cache is not None:
+            freed = self.prefix_cache.evict_reclaimable(self._ref, 1)
+            self.n_cache_evictions += len(freed)
+            for p in freed:
+                self._ref[p] = 0
+                bisect.insort(self._free_pages, p)
+        if not self._free_pages:
+            return None
+        page = self._free_pages.pop(0)
+        self._ref[page] = 1
+        return page
+
+    def _unref(self, page: int) -> None:
+        self._ref[page] -= 1
+        if self._ref[page] == 0:
+            bisect.insort(self._free_pages, page)
+        elif self._ref[page] < 0:
+            raise RuntimeError(f"page {page}: refcount underflow")
 
     def _alloc_pages(self, slot: int, n: int) -> None:
         for _ in range(n):
-            page = self._free_pages.pop(0)
+            page = self._take_page()
+            if page is None:
+                raise RuntimeError("page pool exhausted — admission must "
+                                   "check available_pages first")
             self.block_tables[slot, self._n_pages[slot]] = page
             self._n_pages[slot] += 1
+
+    def _written_rows(self, seq: Sequence) -> int:
+        """KV rows [0, n) of this sequence that hold final content."""
+        if seq.prefill_progress is not None:
+            return seq.prefill_progress
+        return max(seq.next_write_pos, 0)
+
+    def _register_prefix(self, slot: int, seq: Sequence, upto: int) -> None:
+        if self.prefix_cache is None or upto <= 0:
+            return
+        upto = min(upto, int(self._n_pages[slot]) * self.page_size)
+        pages = [int(p) for p in
+                 self.block_tables[slot, :pages_for(upto, self.page_size)]]
+        for p in self.prefix_cache.register(seq.full_prompt[:upto], upto,
+                                            pages):
+            self._ref[p] += 1
+
+    def on_prefill_complete(self, slot: int) -> None:
+        """Register the slot's *full* prompt pages in the prefix cache.
+        The partially-filled tail page waits for release, so a sequence
+        never copy-on-writes against its own registration."""
+        if self.prefix_cache is None:
+            return
+        seq = self._running[slot]
+        upto = (self._written_rows(seq) // self.page_size) * self.page_size
+        self._register_prefix(slot, seq, upto)
 
     def _release_slot(self, slot: int) -> Sequence:
         seq = self._running.pop(slot)
         if self.paged:
+            # register everything written — including the partial tail and
+            # decode-grown pages, which serve multi-turn follow-ups
+            if self.prefix_cache is not None:
+                self._register_prefix(slot, seq, self._written_rows(seq))
             held = int(self._n_pages[slot])
-            self._free_pages.extend(
-                int(p) for p in self.block_tables[slot, :held])
-            self._free_pages.sort()
+            for p in self.block_tables[slot, :held]:
+                self._unref(int(p))
             self.block_tables[slot, :] = 0
             self._n_pages[slot] = 0
         self._free.append(slot)
@@ -333,17 +491,83 @@ class Scheduler:
         """Free a running sequence's pages and requeue it (FCFS position
         restored via its submission order)."""
         seq = self._release_slot(slot)
+        seq.prefill_progress = None      # resume restarts its prefill
+        seq.cache_hit_tokens = 0
         seq.n_preempts += 1
         self.n_preemptions += 1
         orders = [s.order for s in self._waiting]
         self._waiting.insert(bisect.bisect_left(orders, seq.order), seq)
         return seq
 
-    def ensure_decode_pages(self) -> List[Tuple[int, Sequence]]:
+    # -- copy-on-write -----------------------------------------------------
+
+    def _cow_if_shared(self, slot: int,
+                       idx: int) -> List[Tuple[int, Sequence]]:
+        """Make block-table entry ``idx`` of ``slot`` exclusively owned
+        before a write lands in it. Prefers a fresh copy (keeping the
+        cache entry warm); under pool exhaustion it instead evicts the
+        cache's claim, and as a last resort preempts other sharers.
+        Returns preempted (slot, sequence) pairs."""
+        preempted: List[Tuple[int, Sequence]] = []
+        while True:
+            page = int(self.block_tables[slot, idx])
+            if self._ref[page] <= 1:
+                return preempted
+            dst = self._take_page()
+            if dst is not None:
+                self._cow_pending.append((page, dst))
+                self.n_cow_copies += 1
+                self.block_tables[slot, idx] = dst
+                self._unref(page)
+                return preempted
+            # no page anywhere: sacrifice the cache's claim on this page
+            if self.prefix_cache is not None \
+                    and self.prefix_cache.unregister(page):
+                self.n_cache_evictions += 1
+                self._ref[page] -= 1     # cache's reference; never last
+                continue
+            # still shared with other running sequences: preempt the
+            # newest of them (never the writer itself)
+            others = [s for s in self._running if s != slot]
+            victim = max(others, key=lambda s: self._running[s].order)
+            preempted.append((victim, self._preempt(victim)))
+
+    def prepare_chunk_writes(self, slot: int, start: int,
+                             end: int) -> List[Tuple[int, Sequence]]:
+        """Copy-on-write every page a prefill chunk's KV writes
+        [start, end) land in. Returns preempted (slot, sequence) pairs;
+        the engine must drain ``take_cow_copies()`` before the chunk."""
+        if not self.paged or start >= end:
+            return []
+        preempted: List[Tuple[int, Sequence]] = []
+        first = start // self.page_size
+        last = (end - 1) // self.page_size
+        for idx in range(first, min(last + 1, int(self._n_pages[slot]))):
+            preempted.extend(self._cow_if_shared(slot, idx))
+        return preempted
+
+    def take_cow_copies(self) -> List[Tuple[int, int]]:
+        """Drain the pending (src_page, dst_page) copy-on-write pairs.
+        The engine must apply them to the device pool before the next
+        cache-writing step."""
+        if not self.paged:
+            return []
+        out, self._cow_pending = self._cow_pending, []
+        return out
+
+    # -- paged decode growth / preemption ---------------------------------
+
+    def ensure_decode_pages(self, writing: Optional[Set[int]] = None) \
+            -> List[Tuple[int, Sequence]]:
         """Before a decode step: make sure every running slot owns the page
-        its next KV write lands in, preempting lowest-priority sequences
-        on pool exhaustion. Returns the (slot, sequence) pairs preempted
-        this round — the engine must clear their device-side slot state.
+        its next KV write lands in — exclusively, copy-on-writing shared
+        pages — preempting lowest-priority sequences on pool exhaustion.
+        ``writing`` names the slots the coming step actually writes (all
+        decoding slots by default); slots mid-chunked-prefill are skipped
+        (their pages are preallocated and their writes guarded by
+        ``prepare_chunk_writes``). Returns the (slot, sequence) pairs
+        preempted this round — the engine must clear their device-side
+        slot state and drain ``take_cow_copies()``.
         """
         if not self.paged:
             return []
@@ -353,16 +577,27 @@ class Scheduler:
             if slot not in self._running:     # preempted as a victim below
                 continue
             seq = self._running[slot]
+            if seq.prefill_progress is not None:
+                continue
             need = seq.next_write_pos // self.page_size + 1
             while int(self._n_pages[slot]) < need:
-                if self._free_pages:
-                    self._alloc_pages(slot, 1)
+                page = self._take_page()
+                if page is not None:
+                    self.block_tables[slot, self._n_pages[slot]] = page
+                    self._n_pages[slot] += 1
                     continue
                 victim = max(self._running,
                              key=lambda s: self._running[s].order)
                 preempted.append((victim, self._preempt(victim)))
                 if victim == slot:
                     break                     # preempted itself; move on
+            if slot not in self._running:
+                continue
+            if writing is not None and slot not in writing:
+                continue
+            idx = seq.next_write_pos // self.page_size
+            if idx < int(self._n_pages[slot]):
+                preempted.extend(self._cow_if_shared(slot, idx))
         return preempted
 
     # -- completion / eviction --------------------------------------------
@@ -377,3 +612,64 @@ class Scheduler:
         self.n_completed += 1
         self.n_evicted += int(evicted)
         return seq
+
+    def flush_prefix_cache(self) -> int:
+        """Unregister every cached page (e.g. after warmup, so benchmark
+        hits are earned, not inherited). Pages still shared with running
+        sequences stay allocated; the rest return to the free list."""
+        if self.prefix_cache is None:
+            return 0
+        n = 0
+        for p in self.prefix_cache.pages():
+            self.prefix_cache.unregister(int(p))
+            self._unref(int(p))
+            n += 1
+        return n
+
+    # -- invariants (property-test harness; cheap enough for debug use) ----
+
+    def check_invariants(self) -> None:
+        """Assert pool conservation: every usable page is either free or
+        refcounted; refcounts equal block-table membership plus cache
+        registration; no aliased/dangling block-table entries; byte
+        accounting matches distinct pages in use."""
+        if not self.paged:
+            return
+        ref_expect = np.zeros((self.total_pages,), np.int64)
+        for slot, _seq in self._running.items():
+            held = int(self._n_pages[slot])
+            row = [int(p) for p in self.block_tables[slot, :held]]
+            if len(set(row)) != held:
+                raise AssertionError(
+                    f"slot {slot}: aliased block-table entries {row}")
+            if any(p == 0 for p in row):
+                raise AssertionError(f"slot {slot}: sink page in table")
+            if (self.block_tables[slot, held:] != 0).any():
+                raise AssertionError(
+                    f"slot {slot}: dangling entries past n_pages={held}")
+            for p in row:
+                ref_expect[p] += 1
+        if self.prefix_cache is not None:
+            for p in self.prefix_cache.pages():
+                ref_expect[int(p)] += 1
+        if not (ref_expect == self._ref).all():
+            bad = np.nonzero(ref_expect != self._ref)[0]
+            raise AssertionError(
+                f"refcount mismatch at pages {bad.tolist()}: expected "
+                f"{ref_expect[bad].tolist()}, got "
+                f"{self._ref[bad].tolist()}")
+        free = set(self._free_pages)
+        if len(free) != len(self._free_pages):
+            raise AssertionError("duplicate pages in the free list")
+        for p in range(1, self.total_pages):
+            if (int(self._ref[p]) > 0) == (p in free):
+                raise AssertionError(
+                    f"page {p}: ref {int(self._ref[p])} inconsistent with "
+                    f"free-list membership {p in free}")
+        if int((self._ref[1:] > 0).sum()) + len(free) != self.usable_pages:
+            raise AssertionError("page conservation violated")
+        if self.bytes_in_use != self.pages_in_use * self.page_bytes:
+            raise AssertionError("bytes_in_use out of sync with pages")
+        for slot in self._free:
+            if slot in self._running:
+                raise AssertionError(f"slot {slot} both free and running")

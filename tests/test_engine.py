@@ -379,3 +379,74 @@ def test_engine_stop_token(rng, cpu_opts):
                               stop_token=int(stop))])[0]
     assert out.finish_reason == "stop"
     assert out.token_ids == base.token_ids[:first + 1]
+
+
+# ---------------------------------------------------------------------------
+# Chunked prefill vs whole prefill (codes-domain exactness; DESIGN.md Sec. 7)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("chunk_pages", [1, 2, 4])
+@pytest.mark.parametrize("kv_bits", [16, 8, 4])
+def test_chunked_prefill_matches_whole(chunk_pages, kv_bits, rng, cpu_opts):
+    """Feeding a prompt through ``prefill_chunk`` in 1/2/4-page pieces
+    must land the same KV in the pool as one whole ``forward_prefill`` +
+    ``cache_insert_paged``, and pick the same greedy first token.
+
+    At kv_bits 8/4 the comparison is *byte equality of the stored codes
+    and stats* — a row's quantization depends only on that row's K/V, and
+    attention inputs match because masked rows contribute exact zeros.
+    At kv_bits 16 the dense float rows may differ by reduction-order ulps
+    (the padded whole prefill and the gathered chunk attend over
+    different padded key widths), so only the greedy token is pinned —
+    the same foundation as the prefill-vs-decode parity tests above.
+    """
+    import dataclasses
+    from repro.models import lm
+
+    cfg = cb.get_smoke("granite_3_8b")
+    params = model.init(rng, cfg)
+    opts = dataclasses.replace(cpu_opts, kv_bits=kv_bits)
+    S, page, n_pages = 20, 8, 3                 # 2 full pages + 4-row tail
+    toks = jax.random.randint(jax.random.PRNGKey(9), (1, S), 0, cfg.vocab)
+
+    # whole prefill -> scatter into pages [1, 2, 3]
+    logits_w, kv = lm.forward_prefill(params, cfg, opts,
+                                      {"tokens": toks},
+                                      pad_to=n_pages * page)
+    cache_w = model.init_paged_cache(cfg, 5, page, jnp.float32,
+                                     kv_bits=kv_bits)
+    cache_w = model.cache_insert_paged(
+        cache_w, kv, np.array([[1, 2, 3]], np.int32))
+
+    # chunked prefill into the same pages of a fresh pool
+    cache_c = model.init_paged_cache(cfg, 5, page, jnp.float32,
+                                     kv_bits=kv_bits)
+    table = np.array([[1, 2, 3, 0]], np.int32)
+    C = chunk_pages * page
+    toks_np = np.asarray(toks[0])
+    logits_c = None
+    for a in range(0, S, C):
+        b = min(a + C, S)
+        chunk = np.zeros((1, C), np.int32)
+        chunk[0, :b - a] = toks_np[a:b]
+        positions = (a + np.arange(C)).astype(np.int32)
+        write_pages = np.zeros((C,), np.int32)   # pad rows -> sink page 0
+        write_rows = np.zeros((C,), np.int32)
+        write_pages[:b - a] = table[0, positions[:b - a] // page]
+        write_rows[:b - a] = positions[:b - a] % page
+        logits_c, cache_c = model.prefill_chunk(
+            params, cfg, opts, cache_c, jnp.asarray(chunk),
+            jnp.asarray(positions), jnp.asarray(write_pages),
+            jnp.asarray(write_rows), jnp.asarray(table),
+            jnp.asarray(b - 1 - a, jnp.int32))
+
+    assert int(jnp.argmax(logits_w[0])) == int(jnp.argmax(logits_c[0]))
+    if kv_bits == 16:
+        return
+    for name in cache_w:
+        w, c = np.asarray(cache_w[name]), np.asarray(cache_c[name])
+        # full prompt pages byte-for-byte
+        np.testing.assert_array_equal(w[:, 1:3], c[:, 1:3], err_msg=name)
+        # partial tail page: only the 4 written rows are comparable
+        np.testing.assert_array_equal(w[:, 3, :4], c[:, 3, :4],
+                                      err_msg=f"{name} tail")

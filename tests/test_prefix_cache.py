@@ -1,0 +1,417 @@
+"""Prefix cache + chunked prefill (DESIGN.md Sec. 7).
+
+Three layers of evidence that page sharing is safe and exact:
+
+  * **radix-index unit tests** — lookup/register/partial-tail semantics,
+    LRU reclaim, prune-on-unregister.
+  * **property trace suite** (hypothesis; skipped when absent — see
+    requirements.txt) — random admit / chunked-prefill / decode / COW /
+    preempt / complete / flush traces against the scheduler, asserting
+    after *every* op: refcount conservation, no dangling or aliased
+    block-table entries, free-list consistency, counter sanity.  The
+    token alphabet is tiny so shared prefixes (and divergences) arise
+    constantly.
+  * **engine bit-identity** — a prefix-cache hit must decode the exact
+    token stream a cold engine produces (greedy AND sampled, kv_bits
+    16/8/4), and the shared pages must be byte-identical
+    (``page_fingerprint``) to what a cold prefill writes.  In the codes
+    domain this is equality, not tolerance.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import base as cb
+from repro.models import kv_cache as kvq
+from repro.models import model
+from repro.serve.engine import Engine, EngineConfig, Request, SamplingParams
+from repro.serve.prefix_cache import PrefixCache, chunk_key
+from repro.serve.scheduler import Scheduler, pages_for
+
+
+def _toks(*xs):
+    return np.asarray(xs, np.int32)
+
+
+# ---------------------------------------------------------------------------
+# Radix index unit tests (no jax, no scheduler)
+# ---------------------------------------------------------------------------
+
+class TestPrefixCacheIndex:
+    def test_register_then_full_hit(self):
+        pc = PrefixCache(page_size=4)
+        t = _toks(1, 2, 3, 4, 5, 6, 7, 8)
+        assert pc.register(t, 8, [5, 9]) == [5, 9]
+        hit, pages = pc.lookup(t)
+        assert hit == 8 and pages == [5, 9]
+
+    def test_prefix_hit_shorter_and_longer_queries(self):
+        pc = PrefixCache(page_size=4)
+        pc.register(_toks(1, 2, 3, 4, 5, 6, 7, 8), 8, [5, 9])
+        # longer query: only the registered prefix hits
+        hit, pages = pc.lookup(_toks(1, 2, 3, 4, 5, 6, 7, 8, 9, 10))
+        assert hit == 8 and pages == [5, 9]
+        # diverging inside the second page: the matching leading rows of
+        # that page still hit (attached as a partial tail -> COW)
+        hit, pages = pc.lookup(_toks(1, 2, 3, 4, 5, 6, 0, 0))
+        assert hit == 6 and pages == [5, 9]
+        # diverging at the second page's first row: only chunk 1 hits
+        hit, pages = pc.lookup(_toks(1, 2, 3, 4, 0, 0, 0, 0))
+        assert hit == 4 and pages == [5]
+        # diverging first chunk: miss
+        assert pc.lookup(_toks(9, 2, 3, 4))[0] == 0
+
+    def test_partial_tail_hit(self):
+        pc = PrefixCache(page_size=4)
+        pc.register(_toks(1, 2, 3, 4, 5, 6), 6, [5, 9])     # page 9: 2 rows
+        hit, pages = pc.lookup(_toks(1, 2, 3, 4, 5, 6, 7, 8))
+        assert hit == 6 and pages == [5, 9]
+        # shorter partial overlap only counts matching leading tokens
+        hit, pages = pc.lookup(_toks(1, 2, 3, 4, 5, 0))
+        assert hit == 5 and pages == [5, 9]
+
+    def test_existing_entries_win_on_reregister(self):
+        pc = PrefixCache(page_size=4)
+        assert pc.register(_toks(1, 2, 3, 4), 4, [5]) == [5]
+        # same chunk registered from another sequence's page: no new claim
+        assert pc.register(_toks(1, 2, 3, 4), 4, [7]) == []
+        assert pc.lookup(_toks(1, 2, 3, 4)) == (4, [5])
+
+    def test_unregister_prunes_chain(self):
+        pc = PrefixCache(page_size=2)
+        pc.register(_toks(1, 2, 3, 4), 4, [3, 4])
+        assert pc.owns(3) and pc.owns(4)
+        assert pc.unregister(4)
+        assert not pc.owns(4) and pc.owns(3)
+        assert pc.lookup(_toks(1, 2, 3, 4)) == (2, [3])
+        assert pc.unregister(3)
+        assert pc.n_pages == 0
+        assert pc.lookup(_toks(1, 2, 3, 4)) == (0, [])
+
+    def test_lru_evicts_leaves_first(self):
+        pc = PrefixCache(page_size=2)
+        pc.register(_toks(1, 2, 3, 4), 4, [3, 4])           # chain 3 -> 4
+        pc.register(_toks(5, 6), 2, [7])
+        ref = np.zeros(10, np.int32)
+        for p in (3, 4, 7):
+            ref[p] = 1                                       # cache-only
+        pc.touch([7])                                        # 7 is recent
+        freed = pc.evict_reclaimable(ref, 1)
+        assert freed == [4]                                  # leaf, LRU
+        assert pc.count_reclaimable(ref) == 2
+
+    def test_interior_pages_not_reclaimable_while_child_lives(self):
+        pc = PrefixCache(page_size=2)
+        pc.register(_toks(1, 2, 3, 4), 4, [3, 4])
+        ref = np.zeros(10, np.int32)
+        ref[3] = 1
+        ref[4] = 2                                           # 4 also in use
+        # 4 is pinned by its extra ref; 3 is interior to a live chain
+        assert pc.count_reclaimable(ref) == 0
+        assert pc.evict_reclaimable(ref, 1) == []
+
+    def test_chunk_key_is_exact(self):
+        assert chunk_key(_toks(1, 2)) != chunk_key(_toks(1, 3))
+        assert chunk_key(_toks(258)) != chunk_key(_toks(2))  # no byte folding
+
+
+# ---------------------------------------------------------------------------
+# Property trace suite (hypothesis)
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                  # local containers: see requirements.txt
+    HAVE_HYPOTHESIS = False
+
+PAGE = 4
+POOL = 14            # usable 13: tight enough to exercise reclaim + preempt
+SLOTS = 3
+CHUNK = PAGE         # one page per prefill chunk
+ALPHABET = 3         # tiny vocab => constant prefix sharing and divergence
+
+
+class _Trace:
+    """Host-side engine emulation around a prefix-cache Scheduler: applies
+    the same call protocol as serve/engine.py (schedule -> chunked prefill
+    with prepare_chunk_writes -> ensure_decode_pages -> complete) without
+    any device state, and checks invariants after every transition."""
+
+    def __init__(self):
+        self.s = Scheduler(max_slots=SLOTS, prefill_batch=2, min_bucket=4,
+                           max_len=8 * PAGE, page_size=PAGE,
+                           total_pages=POOL, prefix_cache=True)
+        self.prefilling = {}          # slot -> seq
+        self.active = {}              # slot -> seq
+        self.uid = 0
+        self.n_finished = 0
+
+    def check(self):
+        self.s.check_invariants()
+        s = self.s
+        assert s.n_cache_hits <= s.n_cache_lookups
+        assert s.n_cache_hit_pages <= s.n_cache_hit_tokens
+        assert 0 <= s.cached_pages <= s.usable_pages
+        assert s.pages_in_use <= s.usable_pages
+        held = set(self.prefilling) | set(self.active)
+        assert held == set(s.running()), (held, set(s.running()))
+
+    def _drop_preempted(self, pairs):
+        for slot, _seq in pairs:
+            self.prefilling.pop(slot, None)
+            self.active.pop(slot, None)
+
+    def _take_cows(self):
+        copies = self.s.take_cow_copies()
+        dsts = [d for _, d in copies]
+        assert len(set(dsts)) == len(dsts), f"dst reused: {copies}"
+        for src, dst in copies:
+            assert src != dst and dst != 0
+
+    def submit(self, prompt_len, max_new, rng):
+        prompt = rng.integers(0, ALPHABET, prompt_len).astype(np.int32)
+        self.s.submit(Request(uid=self.uid, prompt=prompt,
+                              sampling=SamplingParams(max_new_tokens=max_new)))
+        self.uid += 1
+
+    def schedule(self):
+        for ss in self.s.schedule():
+            ss.seq.prefill_progress = ss.seq.cache_hit_tokens
+            self.prefilling[ss.slot] = ss.seq
+
+    def advance_prefill(self):
+        if not self.prefilling:
+            return
+        slot = min(self.prefilling, key=lambda s: self.prefilling[s].order)
+        seq = self.prefilling[slot]
+        a = seq.prefill_progress
+        b = min(a + CHUNK, seq.full_prompt.size)
+        self._drop_preempted(self.s.prepare_chunk_writes(slot, a, b))
+        self._take_cows()
+        if slot not in self.prefilling:      # preempted itself? impossible:
+            return                            # COW never victimizes writer
+        seq.prefill_progress = b
+        if b >= seq.full_prompt.size:
+            self.s.on_prefill_complete(slot)
+            seq.prefill_progress = None
+            del self.prefilling[slot]
+            seq.generated.append(int(self.uid) % ALPHABET)
+            self.active[slot] = seq
+
+    def decode(self, rng):
+        if not self.active:
+            return
+        self._drop_preempted(
+            self.s.ensure_decode_pages(writing=set(self.active)))
+        self._take_cows()
+        for slot in list(self.active):
+            seq = self.active[slot]
+            seq.generated.append(int(rng.integers(0, ALPHABET)))
+            sp = seq.request.sampling
+            if len(seq.generated) >= sp.max_new_tokens:
+                self.s.complete(slot)
+                del self.active[slot]
+                self.n_finished += 1
+
+    def flush(self):
+        self.s.flush_prefix_cache()
+
+    def drain(self, rng):
+        for _ in range(10_000):
+            if not self.s.has_work:
+                return
+            self.schedule()
+            self.advance_prefill()
+            self.decode(rng)
+        raise AssertionError("trace failed to drain — livelock")
+
+
+if HAVE_HYPOTHESIS:
+    OPS = st.lists(
+        st.one_of(
+            st.tuples(st.just("submit"), st.integers(2, 3 * PAGE),
+                      st.integers(1, 6)),
+            st.tuples(st.just("schedule"), st.none(), st.none()),
+            st.tuples(st.just("prefill"), st.none(), st.none()),
+            st.tuples(st.just("decode"), st.none(), st.none()),
+            st.tuples(st.just("flush"), st.none(), st.none()),
+        ),
+        min_size=1, max_size=60)
+
+    class TestSchedulerTraces:
+        @settings(max_examples=60, deadline=None, derandomize=True)
+        @given(ops=OPS, seed=st.integers(0, 2 ** 16))
+        def test_random_trace_preserves_invariants(self, ops, seed):
+            rng = np.random.default_rng(seed)
+            tr = _Trace()
+            for op, a, b in ops:
+                if op == "submit":
+                    tr.submit(a, b, rng)
+                elif op == "schedule":
+                    tr.schedule()
+                elif op == "prefill":
+                    tr.advance_prefill()
+                elif op == "decode":
+                    tr.decode(rng)
+                elif op == "flush":
+                    tr.flush()
+                tr.check()
+            tr.drain(rng)
+            tr.check()
+            # no request lost: everything submitted eventually completed
+            assert tr.n_finished == tr.s.n_submitted
+            assert tr.s.n_completed == tr.s.n_submitted
+
+        @settings(max_examples=30, deadline=None, derandomize=True)
+        @given(seed=st.integers(0, 2 ** 16))
+        def test_shared_prefix_storm_conserves_pages(self, seed):
+            """Many near-identical prompts through a tight pool: constant
+            hits, COWs, LRU reclaim and preemption — then full drain back
+            to an all-free pool."""
+            rng = np.random.default_rng(seed)
+            tr = _Trace()
+            base = rng.integers(0, ALPHABET, 2 * PAGE).astype(np.int32)
+            for i in range(8):
+                tail = rng.integers(0, ALPHABET,
+                                    int(rng.integers(1, PAGE + 1)))
+                prompt = np.concatenate([base, tail.astype(np.int32)])
+                tr.s.submit(Request(
+                    uid=tr.uid, prompt=prompt,
+                    sampling=SamplingParams(
+                        max_new_tokens=int(rng.integers(1, 5)))))
+                tr.uid += 1
+                tr.schedule()
+                tr.advance_prefill()
+                tr.decode(rng)
+                tr.check()
+            tr.drain(rng)
+            tr.check()
+            assert tr.s.n_completed == tr.s.n_submitted
+            tr.flush()
+            tr.check()
+            # pool fully drained: every usable page is free again
+            assert len(tr.s._free_pages) == tr.s.usable_pages
+else:
+    def test_property_suite_needs_hypothesis():
+        pytest.skip("property tests need hypothesis (see requirements.txt)")
+
+
+# ---------------------------------------------------------------------------
+# Engine bit-identity: hit decode == cold decode (greedy + sampled)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = cb.get_smoke("granite_3_8b")
+    from repro.models.lm import ModelOpts
+    opts = ModelOpts(compute_dtype=jnp.float32, remat=False,
+                     attn_chunked_min_len=1 << 30)
+    params = model.init(jax.random.PRNGKey(0), cfg)
+    return params, cfg, opts
+
+
+def _engine(served, kv_bits, prefix_cache=True, total_pages=40):
+    params, cfg, opts = served
+    return Engine(params, cfg, opts, EngineConfig(
+        max_slots=4, max_len=64, prefill_batch=2, min_bucket=8,
+        cache_mode="paged", page_size=8, total_pages=total_pages,
+        kv_bits=kv_bits, prefix_cache=prefix_cache,
+        prefill_chunk=1 if prefix_cache else None))
+
+
+def _req(uid, prompt, temperature=0.0, seed=0, max_new=10):
+    return Request(uid=uid, prompt=prompt,
+                   sampling=SamplingParams(temperature=temperature,
+                                           seed=seed,
+                                           max_new_tokens=max_new))
+
+
+@pytest.mark.parametrize("kv_bits", [16, 8, 4])
+@pytest.mark.parametrize("temperature", [0.0, 0.8])
+def test_hit_decode_bit_identical_to_cold(served, kv_bits, temperature):
+    """The acceptance pin: a prefix-cache hit must produce the exact
+    token stream a cold engine produces — greedy and sampled, at every
+    kv_bits.  Sampling keys fold by (seed, position), so the streams are
+    comparable bit for bit."""
+    _, cfg, _ = served
+    prompt = np.random.default_rng(3).integers(
+        1, cfg.vocab, 19).astype(np.int32)
+
+    cold = _engine(served, kv_bits, prefix_cache=False)
+    want = cold.generate(
+        [_req(0, prompt, temperature, seed=11)])[0].token_ids
+
+    eng = _engine(served, kv_bits, prefix_cache=True)
+    # first pass registers the pages; second pass must hit
+    first = eng.generate([_req(0, prompt, temperature, seed=11)])[0]
+    assert first.token_ids == want       # chunked cold == whole cold
+    eng.reset_stats()
+    hot = eng.generate([_req(1, prompt, temperature, seed=11)])[0]
+    st_ = eng.stats()
+    assert st_["cache_hits"] == 1 and st_["cache_hit_pages"] >= 2
+    assert hot.token_ids == want, (
+        f"kv{kv_bits} t={temperature}: hit decode diverged from cold")
+    eng.scheduler.check_invariants()
+
+
+@pytest.mark.parametrize("kv_bits", [8, 4])
+def test_hit_pages_byte_identical_to_cold_prefill(served, kv_bits):
+    """Shared pages serve the exact bytes a cold prefill writes: compare
+    ``page_fingerprint`` of the first full prompt page across a cold
+    engine and a warmed (registered) engine."""
+    _, cfg, _ = served
+    prompt = np.random.default_rng(5).integers(
+        1, cfg.vocab, 17).astype(np.int32)
+
+    def first_page_fp(eng):
+        hit, pages = eng.scheduler.prefix_cache.lookup(prompt)
+        assert hit >= 8 and pages, "prompt pages not registered"
+        return kvq.page_fingerprint(eng._cache, int(pages[0]))
+
+    a = _engine(served, kv_bits)
+    a.generate([_req(0, prompt)])
+    b = _engine(served, kv_bits)
+    b.generate([_req(0, prompt)])
+    assert first_page_fp(a) == first_page_fp(b)
+
+
+def test_cow_divergence_is_isolated(served):
+    """Two sampled continuations off one cached prefix: both hit, the
+    tail page copy-on-writes, and each stream matches its own cold-start
+    run exactly — divergence never leaks through a shared page."""
+    _, cfg, _ = served
+    prompt = np.random.default_rng(7).integers(
+        1, cfg.vocab, 15).astype(np.int32)
+    want = {}
+    for seed in (21, 22):
+        e = _engine(served, 8, prefix_cache=False)
+        want[seed] = e.generate(
+            [_req(0, prompt, 0.9, seed=seed)])[0].token_ids
+
+    eng = _engine(served, 8)
+    eng.generate([_req(0, prompt, 0.9, seed=20)])       # register
+    eng.reset_stats()
+    outs = eng.generate([_req(1, prompt, 0.9, seed=21),
+                         _req(2, prompt, 0.9, seed=22)])
+    st_ = eng.stats()
+    assert st_["cache_hits"] == 2
+    assert st_["cow_copies"] >= 2        # both wrote the shared tail page
+    assert outs[0].token_ids == want[21]
+    assert outs[1].token_ids == want[22]
+    eng.scheduler.check_invariants()
+
+
+def test_engine_stats_expose_cache_counters(served):
+    """The engine's stats() surface carries the scheduler's cache/COW/
+    preemption counters (satellite: perf reports + CI assertions read
+    these keys)."""
+    eng = _engine(served, 8)
+    st_ = eng.stats()
+    for key in ("preemptions", "cache_lookups", "cache_hits",
+                "cache_hit_tokens", "cache_hit_pages", "cow_copies",
+                "cache_evictions", "cached_pages"):
+        assert key in st_
+        assert st_[key] == 0
