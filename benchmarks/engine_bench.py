@@ -40,6 +40,8 @@ synthetic stream derives from the single ``--seed``.
 from __future__ import annotations
 
 import argparse
+import dataclasses
+import functools
 import json
 import os
 import time
@@ -308,12 +310,17 @@ def kv_sweep_configs(cfg, page_size=8, kv_bits_list=(16, 8, 4)):
         yield kv_bits, pool_bytes, ec
 
 
-def run(arch="granite_3_8b", collect=None, seed=0):
+def run(arch="granite_3_8b", collect=None, seed=0, checkify=False):
     """Yield (name, us_per_token, new_tok_per_s) rows (run.py convention).
 
     ``collect``: optional dict filled with the machine-readable stats
-    that back BENCH_engine.json.
+    that back BENCH_engine.json.  ``checkify=True`` (--checkify) wraps
+    every engine's jitted steps with jax.experimental.checkify index-OOB
+    + NaN checks — an opt-in sanitizer for debugging a bad run, OFF by
+    default because the per-step error sync is not what the numbers
+    should measure.
     """
+    mk_ec = functools.partial(EngineConfig, checkify=checkify)
     cfg = cb.get_smoke(arch)
     opts = ModelOpts(compute_dtype=jnp.float32, remat=False,
                      attn_chunked_min_len=1 << 30, ssd_chunk=16)
@@ -326,19 +333,19 @@ def run(arch="granite_3_8b", collect=None, seed=0):
         dt, tps = bench_legacy(params, cfg, opts, sc)
         yield (f"serve_generate_w{w_bits}_b4", 1e6 / tps, round(tps, 1))
         for slots in (1, 4, 8):
-            ec = EngineConfig(max_slots=slots, max_len=64, prefill_batch=4,
-                              cache_mode="paged", page_size=8)
+            ec = mk_ec(max_slots=slots, max_len=64, prefill_batch=4,
+                       cache_mode="paged", page_size=8)
             dt, tps, _, _ = bench_engine(params, cfg, opts, ec)
             yield (f"engine_w{w_bits}_slots{slots}", 1e6 / tps,
                    round(tps, 1))
         # equal-HBM A/B: 512 cache rows either as 8 fixed slot regions or
         # as 64 shared pages feeding up to 16 slots
         dt, tps, peak, _ = bench_engine(params, cfg, opts,
-                                        EngineConfig(**SLOT_EC))
+                                        mk_ec(**SLOT_EC))
         yield (f"engine_w{w_bits}_slotcache_eqhbm_conc{peak}", 1e6 / tps,
                round(tps, 1))
         dt, tps, peak, _ = bench_engine(params, cfg, opts,
-                                        EngineConfig(**PAGED_EC))
+                                        mk_ec(**PAGED_EC))
         yield (f"engine_w{w_bits}_pagedcache_eqhbm_conc{peak}", 1e6 / tps,
                round(tps, 1))
         if w_bits == 16:
@@ -358,7 +365,7 @@ def run(arch="granite_3_8b", collect=None, seed=0):
                       cache_mode="paged", page_size=8, total_pages=140,
                       kv_bits=8)
             for on in (False, True):
-                ec = EngineConfig(**sp, prefix_cache=on,
+                ec = mk_ec(**sp, prefix_cache=on,
                                   prefill_chunk=4 if on else None)
                 dt, tps, peak, stats = _median_trial(
                     lambda ec=ec: bench_shared_prefix(
@@ -380,7 +387,7 @@ def run(arch="granite_3_8b", collect=None, seed=0):
                       cache_mode="paged", page_size=8, total_pages=132,
                       kv_bits=8)
             for on in (False, True):
-                ec = EngineConfig(**mt, prefix_cache=on,
+                ec = mk_ec(**mt, prefix_cache=on,
                                   prefill_chunk=4 if on else None)
                 dt, tps, peak, stats = _median_trial(
                     lambda ec=ec: bench_multiturn(
@@ -400,6 +407,7 @@ def run(arch="granite_3_8b", collect=None, seed=0):
         if w_bits != 4:
             continue
         for kv_bits, pool_bytes, ec in kv_sweep_configs(cfg):
+            ec = dataclasses.replace(ec, checkify=checkify)
             dt, tps, peak, stats = bench_engine(params, cfg, opts, ec,
                                                 n_requests=KV_SWEEP_REQUESTS,
                                                 seed=seed)
@@ -423,12 +431,20 @@ def main():
     p.add_argument("--seed", type=int, default=0,
                    help="single seed behind every synthetic stream "
                         "(prompts, turns, sampling)")
+    # opt-in debug sanitizers (OFF by default; DESIGN.md Sec. 10)
+    p.add_argument("--checkify", action="store_true",
+                   help="wrap jitted engine steps with checkify index-OOB "
+                        "+ NaN checks (debug; skews timings)")
+    p.add_argument("--debug-nans", action="store_true",
+                   help="enable jax_debug_nans globally (debug only)")
     args = p.parse_args()
+    if args.debug_nans:
+        jax.config.update("jax_debug_nans", True)
     collect = {"arch": args.arch, "prompt_len": PROMPT_LEN,
                "new_tokens": NEW_TOKENS, "seed": args.seed}
     print("name,us_per_call,derived")
     for name, us, derived in run(args.arch, collect=collect,
-                                 seed=args.seed):
+                                 seed=args.seed, checkify=args.checkify):
         print(f"{name},{us:.1f},{derived}")
         collect.setdefault("rows", []).append(
             {"name": name, "us_per_call": round(us, 1), "tok_s": derived})

@@ -1,0 +1,27 @@
+"""uniqcheck: static analysis & compile-audit subsystem (DESIGN.md Sec. 10).
+
+Three passes prove serving-stack contracts *without running the engine on
+real traffic*:
+
+  * ``lint``          — stdlib-``ast`` rules for repo-specific trace/jit
+                        hazards (UQ1xx rule catalog).
+  * ``compile_audit`` — abstract interpretation (``jax.eval_shape`` /
+                        ``jax.make_jaxpr``) of every public entry point
+                        across the kv_bits x page_size x arch x w_dist
+                        matrix: byte accounting, sharding-rule coverage,
+                        recompile-count budget.
+  * ``kernel_audit``  — Pallas BlockSpec grid-coverage / OOB-index-map /
+                        VMEM-footprint checks for every kernel in
+                        ``kernels/``.
+
+Findings are machine-readable (``Finding`` -> JSON) and diffed against a
+checked-in baseline (``analysis_baseline.json``): CI fails on *new*
+findings only, so the baseline can only shrink or hold.
+
+    PYTHONPATH=src python -m repro.analysis.check \
+        --format json --baseline analysis_baseline.json
+"""
+
+from repro.analysis.findings import Finding, compare_baseline, load_baseline
+
+__all__ = ["Finding", "compare_baseline", "load_baseline"]

@@ -1,0 +1,123 @@
+"""uniqcheck CLI: run all passes, diff against the checked-in baseline.
+
+    PYTHONPATH=src python -m repro.analysis.check \
+        --format json --baseline analysis_baseline.json
+
+Exit codes: 0 = clean vs baseline, 1 = new findings (or growth with
+--assert-no-growth), 2 = internal error.  ``--write-baseline`` refreshes
+the baseline file (review the diff: the baseline may only shrink or
+hold, CI enforces it).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import List
+
+from repro.analysis import compile_audit, kernel_audit, lint
+from repro.analysis.findings import (Finding, compare_baseline,
+                                     findings_to_json, load_baseline)
+
+PASSES = ("lint", "kernel", "compile")
+
+
+def run_passes(only: List[str], vmem_budget_mb: float,
+               kv_bits: List[int], with_engine: bool):
+    findings: List[Finding] = []
+    info = {}
+    if "lint" in only:
+        findings.extend(lint.run_lint())
+        info["lint_rules"] = sorted(lint.RULES)
+    if "kernel" in only:
+        fs, i = kernel_audit.run_kernel_audit(vmem_budget_mb)
+        findings.extend(fs)
+        info.update(i)
+    if "compile" in only:
+        fs, i = compile_audit.run_compile_audit(tuple(kv_bits),
+                                                with_engine=with_engine)
+        findings.extend(fs)
+        info.update(i)
+    return findings, info
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(prog="python -m repro.analysis.check")
+    p.add_argument("--format", choices=("text", "json"), default="text")
+    p.add_argument("--baseline", default=None,
+                   help="baseline JSON: only findings NOT in it fail")
+    p.add_argument("--write-baseline", default=None, metavar="PATH",
+                   help="write current findings as the new baseline")
+    p.add_argument("--only", default=",".join(PASSES),
+                   help=f"comma list of passes to run ({','.join(PASSES)})")
+    p.add_argument("--vmem-budget-mb", type=float,
+                   default=kernel_audit.DEFAULT_VMEM_BUDGET_MB)
+    p.add_argument("--kv-bits", default="16,8,4",
+                   help="kv_bits matrix for the compile audit")
+    p.add_argument("--skip-engine", action="store_true",
+                   help="skip the real-engine recompile-budget check "
+                        "(static passes only; faster)")
+    p.add_argument("--assert-no-growth", action="store_true",
+                   help="also fail if the finding count exceeds the "
+                        "baseline count (baseline shrinks-or-holds)")
+    args = p.parse_args(argv)
+
+    only = [s.strip() for s in args.only.split(",") if s.strip()]
+    bad = [s for s in only if s not in PASSES]
+    if bad:
+        print(f"unknown pass(es): {bad}", file=sys.stderr)
+        return 2
+    kv_bits = [int(s) for s in args.kv_bits.split(",") if s.strip()]
+
+    findings, info = run_passes(only, args.vmem_budget_mb, kv_bits,
+                                with_engine=not args.skip_engine)
+
+    baseline = load_baseline(args.baseline) if args.baseline else None
+    new, fixed = compare_baseline(findings, baseline)
+
+    if args.write_baseline:
+        with open(args.write_baseline, "w") as fh:
+            json.dump(findings_to_json(findings), fh, indent=2,
+                      sort_keys=True)
+            fh.write("\n")
+
+    grew = (args.assert_no_growth and baseline is not None
+            and len(findings) > len(baseline))
+    ok = not new and not grew
+
+    if args.format == "json":
+        out = findings_to_json(findings)
+        out["summary"] = {
+            "passes": only,
+            "total": len(findings),
+            "new": [f.key for f in new],
+            "fixed_vs_baseline": fixed,
+            "baseline_total": len(baseline) if baseline is not None
+            else None,
+            "ok": ok,
+        }
+        out["info"] = info
+        json.dump(out, sys.stdout, indent=2, default=str)
+        print()
+    else:
+        for f in sorted(findings, key=lambda f: f.key):
+            mark = "NEW " if f in new else "     "
+            loc = f"{f.path}:{f.line}" if f.line else f.path
+            print(f"{mark}{f.rule:16s} {loc}\n      {f.message}")
+        print(f"[uniqcheck] passes={','.join(only)} findings="
+              f"{len(findings)} new={len(new)} "
+              f"fixed_vs_baseline={len(fixed)}")
+        if grew:
+            print(f"[uniqcheck] FAIL: {len(findings)} findings > baseline "
+                  f"{len(baseline)} (shrinks-or-holds violated)")
+        if fixed:
+            print("[uniqcheck] baseline entries no longer firing "
+                  f"({len(fixed)}): refresh with --write-baseline to "
+                  "shrink the baseline")
+
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

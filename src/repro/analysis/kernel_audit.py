@@ -1,0 +1,404 @@
+"""Pallas kernel checker: BlockSpec coverage, OOB index maps, VMEM budget.
+
+Compiling a Pallas kernel tells you a BlockSpec is *syntactically* fine;
+it does not tell you the grid covers the output, that a scalar-prefetched
+index map can never address past the pool, or that the block working set
+fits VMEM.  This pass checks those contracts statically, per kernel, by
+*capturing* the ``pallas_call`` invocation instead of running it:
+
+  * every kernel wrapper in ``kernels/`` is called on small representative
+    shapes (plus production-default block shapes for the VMEM estimate)
+    under ``jax.disable_jit()`` with ``pallas.pallas_call`` monkeypatched
+    to a recorder — operands are concrete, so index maps (including the
+    scalar-prefetch block-table maps of ``paged_attn``) evaluate to
+    concrete block indices;
+  * each recorded invocation is then checked:
+      - **index-map bounds**: for every grid point, every operand's block
+        index must address a block inside the operand (the OOB class of
+        bug a bad block table or an off-by-one ``lambda i, j, kk`` map
+        produces);
+      - **output coverage**: the set of output blocks written over the
+        whole grid must equal the block decomposition of ``out_shape`` —
+        no hole the kernel silently leaves at init garbage;
+      - **VMEM footprint**: sum of per-block bytes across operands and
+        outputs (x2 for double buffering) plus scratch, against a
+        configurable budget (default 16 MiB/core).
+
+Findings use logical paths like ``kernels/paged_attn[kv4]`` so the
+baseline is stable across source edits.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import functools
+import itertools
+import math
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.findings import Finding
+
+DEFAULT_VMEM_BUDGET_MB = 16.0
+_MAX_GRID_POINTS = 65536
+
+
+@dataclasses.dataclass
+class SpecCapture:
+    """One operand's BlockSpec against its concrete operand."""
+    block_shape: Optional[Tuple[int, ...]]   # None -> whole-ref (e.g. SMEM)
+    operand_shape: Tuple[int, ...]
+    itemsize: int
+    index_calls: List[Tuple[int, ...]]       # evaluated block indices
+    memory_space: str                        # "block" | "ref"
+
+
+@dataclasses.dataclass
+class PallasCapture:
+    """One recorded ``pallas_call`` invocation."""
+    grid: Tuple[int, ...]
+    in_specs: List[SpecCapture]
+    out_specs: List[SpecCapture]
+    out_shapes: List[Tuple[Tuple[int, ...], Any]]
+    scratch_bytes: int
+    num_scalar_prefetch: int
+    grid_truncated: bool = False
+
+
+def _block_tuple(spec) -> Optional[Tuple[int, ...]]:
+    bs = getattr(spec, "block_shape", None)
+    if bs is None:
+        return None
+    return tuple(int(b) for b in bs)
+
+
+def _scratch_nbytes(scratch_shapes) -> int:
+    total = 0
+    for s in scratch_shapes or ():
+        shape = getattr(s, "shape", None)
+        dtype = getattr(s, "dtype", None)
+        if shape is None:
+            continue
+        itemsize = jnp.dtype(dtype).itemsize if dtype is not None else 4
+        total += int(np.prod(shape)) * itemsize
+    return total
+
+
+def _grid_points(grid: Tuple[int, ...]):
+    """Iterate grid index tuples, truncated at _MAX_GRID_POINTS."""
+    n = int(np.prod(grid)) if grid else 1
+    pts = itertools.product(*[range(g) for g in grid])
+    if n <= _MAX_GRID_POINTS:
+        return list(pts), False
+    return list(itertools.islice(pts, _MAX_GRID_POINTS)), True
+
+
+def _eval_spec(spec, operand, grid, scalar_args) -> SpecCapture:
+    block = _block_tuple(spec)
+    shape = tuple(int(d) for d in np.shape(operand))
+    itemsize = jnp.dtype(jnp.result_type(operand)).itemsize
+    if block is None:
+        return SpecCapture(None, shape, itemsize, [], "ref")
+    index_map = getattr(spec, "index_map", None)
+    calls: List[Tuple[int, ...]] = []
+    if index_map is not None:
+        pts, _trunc = _grid_points(grid)
+        for gp in pts:
+            idx = index_map(*gp, *scalar_args)
+            if not isinstance(idx, tuple):
+                idx = (idx,)
+            calls.append(tuple(int(i) for i in idx))
+    return SpecCapture(block, shape, itemsize, calls, "block")
+
+
+def _make_fake_pallas_call(captured: List[PallasCapture]) -> Callable:
+    def fake_pallas_call(kernel, *, grid=None, grid_spec=None, in_specs=None,
+                         out_specs=None, out_shape=None, scratch_shapes=None,
+                         compiler_params=None, interpret=False, **kw):
+        nsp = 0
+        if grid_spec is not None:
+            grid = tuple(grid_spec.grid)
+            in_specs = list(grid_spec.in_specs)
+            out_specs = grid_spec.out_specs
+            scratch_shapes = getattr(grid_spec, "scratch_shapes", ())
+            nsp = int(getattr(grid_spec, "num_scalar_prefetch", 0))
+        grid = tuple(int(g) for g in (grid or ()))
+        out_specs_list = out_specs if isinstance(out_specs, (list, tuple)) \
+            else [out_specs]
+        out_shape_list = out_shape if isinstance(out_shape, (list, tuple)) \
+            else [out_shape]
+
+        def runner(*operands):
+            scalar_args = tuple(np.asarray(o) for o in operands[:nsp])
+            block_ops = operands[nsp:]
+            _, truncated = _grid_points(grid)
+            cap = PallasCapture(
+                grid=grid,
+                in_specs=[_eval_spec(s, o, grid, scalar_args)
+                          for s, o in zip(in_specs, operands)
+                          ] if nsp == 0 else
+                         [_eval_spec(s, o, grid, scalar_args)
+                          for s, o in zip(in_specs, block_ops)],
+                out_specs=[
+                    _eval_spec(s, jnp.zeros(tuple(os.shape),
+                                            os.dtype), grid, scalar_args)
+                    for s, os in zip(out_specs_list, out_shape_list)],
+                out_shapes=[(tuple(os.shape), os.dtype)
+                            for os in out_shape_list],
+                scratch_bytes=_scratch_nbytes(scratch_shapes),
+                num_scalar_prefetch=nsp,
+                grid_truncated=truncated)
+            captured.append(cap)
+            outs = [jnp.zeros(tuple(os.shape), os.dtype)
+                    for os in out_shape_list]
+            return outs[0] if not isinstance(out_shape, (list, tuple)) \
+                else tuple(outs)
+        return runner
+    return fake_pallas_call
+
+
+@contextlib.contextmanager
+def capture_pallas():
+    """Patch ``pallas.pallas_call`` (the module object every kernel file
+    imported as ``pl``) with the recorder; yields the capture list."""
+    from jax.experimental import pallas
+    captured: List[PallasCapture] = []
+    orig = pallas.pallas_call
+    pallas.pallas_call = _make_fake_pallas_call(captured)
+    try:
+        with jax.disable_jit():
+            yield captured
+    finally:
+        pallas.pallas_call = orig
+
+
+# -- capture checks ---------------------------------------------------------
+
+def _blocks_needed(shape, block) -> Tuple[int, ...]:
+    return tuple(math.ceil(s / b) for s, b in zip(shape, block))
+
+
+def check_capture(cap: PallasCapture, name: str,
+                  vmem_budget_mb: float = DEFAULT_VMEM_BUDGET_MB
+                  ) -> Tuple[List[Finding], Dict[str, Any]]:
+    """Bounds / coverage / VMEM checks for one recorded invocation."""
+    findings: List[Finding] = []
+    path = f"kernels/{name}"
+
+    def spec_findings(sc: SpecCapture, role: str, i: int):
+        if sc.block_shape is None:
+            return
+        if len(sc.block_shape) != len(sc.operand_shape):
+            findings.append(Finding(
+                rule="KERNEL-RANK", path=path,
+                detail=f"{role}{i}:block_rank",
+                message=f"{role} {i}: block {sc.block_shape} rank != "
+                        f"operand {sc.operand_shape} rank"))
+            return
+        needed = _blocks_needed(sc.operand_shape, sc.block_shape)
+        oob = sorted({idx for idx in sc.index_calls
+                      if any(not (0 <= idx[d] < needed[d])
+                             for d in range(len(needed)))})
+        if oob:
+            findings.append(Finding(
+                rule="KERNEL-OOB", path=path,
+                detail=f"{role}{i}:oob",
+                message=f"{role} {i} (shape {sc.operand_shape}, block "
+                        f"{sc.block_shape}): index map addresses blocks "
+                        f"outside [0, {needed}) at e.g. {oob[:4]} over "
+                        f"grid {cap.grid}"))
+
+    for i, sc in enumerate(cap.in_specs):
+        spec_findings(sc, "in", i)
+    for i, sc in enumerate(cap.out_specs):
+        spec_findings(sc, "out", i)
+        # output coverage: every block of out_shape must be written
+        if sc.block_shape is not None and not cap.grid_truncated:
+            needed = _blocks_needed(sc.operand_shape, sc.block_shape)
+            want = set(itertools.product(*[range(n) for n in needed]))
+            got = set(sc.index_calls)
+            missing = sorted(want - got)
+            if missing:
+                findings.append(Finding(
+                    rule="KERNEL-COVERAGE", path=path,
+                    detail=f"out{i}:coverage",
+                    message=f"out {i}: grid {cap.grid} writes "
+                            f"{len(got & want)}/{len(want)} output blocks; "
+                            f"missing e.g. {missing[:4]} — uncovered "
+                            "blocks keep init garbage"))
+
+    # VMEM: one live block per operand/output (x2 double-buffer) + scratch
+    block_bytes = 0
+    for sc in cap.in_specs + cap.out_specs:
+        if sc.block_shape is not None:
+            block_bytes += int(np.prod(sc.block_shape)) * sc.itemsize
+    vmem = 2 * block_bytes + cap.scratch_bytes
+    budget = int(vmem_budget_mb * 1024 * 1024)
+    if vmem > budget:
+        findings.append(Finding(
+            rule="KERNEL-VMEM", path=path, detail="vmem",
+            message=f"estimated VMEM/invocation {vmem / 2**20:.2f} MiB "
+                    f"(2x{block_bytes / 2**20:.2f} blocks + "
+                    f"{cap.scratch_bytes / 2**20:.2f} scratch) exceeds the "
+                    f"{vmem_budget_mb:.0f} MiB budget"))
+    info = {"kernel": name, "grid": list(cap.grid),
+            "vmem_bytes": vmem, "scratch_bytes": cap.scratch_bytes}
+    return findings, info
+
+
+# -- kernel registry --------------------------------------------------------
+
+def _case_qmatmul(bits, **blocks):
+    from repro.kernels import qmatmul as qm
+    M, K, N = 8, 8, 8
+    a = jnp.ones((M, K), jnp.float32)
+    wn = N // 2 if bits == 4 else N
+    w = jnp.zeros((K, wn), jnp.uint8 if bits == 4 else jnp.int8)
+    mu = jnp.zeros((1, N), jnp.float32)
+    sg = jnp.ones((1, N), jnp.float32)
+    qm.qmatmul(a, w, mu, sg, bits=bits, bm=4, bk=4, bn=4, **blocks)
+
+
+def _case_qmatmul_prod():
+    """Production-default blocks: the VMEM estimate that matters."""
+    from repro.kernels import qmatmul as qm
+    M, K, N = 256, 1024, 512
+    a = jnp.ones((M, K), jnp.float32)
+    w = jnp.zeros((K, N), jnp.int8)
+    mu = jnp.zeros((1, N), jnp.float32)
+    sg = jnp.ones((1, N), jnp.float32)
+    qm.qmatmul(a, w, mu, sg, bits=8)
+
+
+def _case_qmatmul_lut(bits):
+    from repro.kernels import qmatmul as qm
+    M, K, N = 8, 8, 8
+    k = 2 ** bits
+    a = jnp.ones((M, K), jnp.float32)
+    wn = N // 2 if bits == 4 else N
+    w = jnp.zeros((K, wn), jnp.uint8 if bits == 4 else jnp.int8)
+    lut = jnp.zeros((k, N), jnp.float32)
+    qm.qmatmul_lut(a, w, lut, bits=bits, bm=4, bk=4, bn=4)
+
+
+def _case_qmatmul_a8():
+    from repro.kernels import qmatmul as qm
+    M, K, N = 8, 8, 8
+    a = jnp.zeros((M, K), jnp.int8)
+    w = jnp.zeros((K, N), jnp.int8)
+    mu = jnp.zeros((1, N), jnp.float32)
+    sg = jnp.ones((1, N), jnp.float32)
+    qm.qmatmul_a8(a, jnp.float32(0.1), w, mu, sg, bits=8, bm=4, bk=4, bn=4)
+
+
+def _case_kquantile(which):
+    from repro.kernels import kquantile as kq
+    G, R, C = 2, 8, 8
+    mu = jnp.zeros((G, 1, C), jnp.float32)
+    sg = jnp.ones((G, 1, C), jnp.float32)
+    if which == "quantize":
+        kq.kquantile_quantize(jnp.ones((G, R, C), jnp.float32), mu, sg,
+                              k=16, block_r=4, block_c=4)
+    else:
+        kq.kquantile_dequantize(jnp.zeros((G, R, C), jnp.int8), mu, sg,
+                                k=16, block_r=4, block_c=4)
+
+
+def _case_uniq_noise(onchip: bool):
+    from repro.kernels import uniq_noise as un
+    G, R, C = 2, 8, 8
+    w = jnp.ones((G, R, C), jnp.float32)
+    mu = jnp.zeros((G, 1, 1), jnp.float32)
+    sg = jnp.ones((G, 1, 1), jnp.float32)
+    mode = jnp.ones((G,), jnp.int32)
+    if onchip:
+        un.uniq_noise_fwd_onchip(w, mu, sg, mode, jnp.int32(7), k=16,
+                                 block_r=4, block_c=4)
+    else:
+        e01 = jnp.zeros((G, R, C), jnp.float32)
+        un.uniq_noise_fwd(w, mu, sg, mode, e01, k=16, block_r=4, block_c=4)
+
+
+def _case_paged_attn(kv_bits, pages=5, page=4, KV=2, G=2, D=8, B=2,
+                     n_pages=2, bt=None):
+    from repro.kernels import paged_attn as pa
+    H = KV * G
+    Dc = D // 2 if kv_bits == 4 else D
+    q = jnp.ones((B, 1, H, D), jnp.float32)
+    codes_dtype = jnp.uint8 if kv_bits == 4 else jnp.int8
+    kc = jnp.zeros((pages, page, KV, Dc), codes_dtype)
+    km = jnp.zeros((pages, page, KV), jnp.bfloat16)
+    ks = jnp.ones((pages, page, KV), jnp.bfloat16)
+    if bt is None:
+        bt = np.arange(B * n_pages).reshape(B, n_pages) % pages
+    bt = jnp.asarray(bt, jnp.int32)
+    q_pos = jnp.asarray([page * n_pages - 1] * B, jnp.int32)
+    pa.paged_quant_attention(q, kc, km, ks, kc, km, ks, bt, q_pos,
+                             kv_bits=kv_bits)
+
+
+def _case_paged_attn_prod():
+    """Serving-scale geometry (page 64, hd 128): the VMEM number CI pins."""
+    _case_paged_attn(8, pages=8, page=64, KV=4, G=2, D=128, B=2, n_pages=4)
+
+
+KERNEL_CASES: Dict[str, Callable[[], None]] = {
+    "qmatmul[w8]": functools.partial(_case_qmatmul, 8),
+    "qmatmul[w4]": functools.partial(_case_qmatmul, 4),
+    "qmatmul[prod_blocks]": _case_qmatmul_prod,
+    "qmatmul_lut[w4]": functools.partial(_case_qmatmul_lut, 4),
+    "qmatmul_a8[w8a8]": _case_qmatmul_a8,
+    "kquantile[quantize]": functools.partial(_case_kquantile, "quantize"),
+    "kquantile[dequantize]": functools.partial(_case_kquantile,
+                                               "dequantize"),
+    "uniq_noise[host]": functools.partial(_case_uniq_noise, False),
+    "uniq_noise[onchip]": functools.partial(_case_uniq_noise, True),
+    "paged_attn[kv8]": functools.partial(_case_paged_attn, 8),
+    "paged_attn[kv4]": functools.partial(_case_paged_attn, 4),
+    "paged_attn[prod_geometry]": _case_paged_attn_prod,
+}
+
+
+def audit_callable(fn: Callable[[], None], name: str,
+                   vmem_budget_mb: float = DEFAULT_VMEM_BUDGET_MB
+                   ) -> Tuple[List[Finding], List[Dict[str, Any]]]:
+    """Capture + check every pallas_call a callable issues."""
+    findings: List[Finding] = []
+    infos: List[Dict[str, Any]] = []
+    with capture_pallas() as caps:
+        fn()
+    if not caps:
+        findings.append(Finding(
+            rule="KERNEL-NOCALL", path=f"kernels/{name}", detail="nocall",
+            message="kernel case issued no pallas_call — audit coverage "
+                    "silently lost"))
+    for cap in caps:
+        fs, info = check_capture(cap, name, vmem_budget_mb)
+        findings.extend(fs)
+        infos.append(info)
+    return findings, infos
+
+
+def run_kernel_audit(vmem_budget_mb: float = DEFAULT_VMEM_BUDGET_MB,
+                     cases: Optional[Sequence[str]] = None
+                     ) -> Tuple[List[Finding], Dict[str, Any]]:
+    findings: List[Finding] = []
+    info: Dict[str, Any] = {"kernels": []}
+    for name, fn in KERNEL_CASES.items():
+        if cases is not None and name not in cases:
+            continue
+        try:
+            fs, infos = audit_callable(fn, name, vmem_budget_mb)
+        except Exception as e:   # noqa: BLE001 - audit must report, not die
+            findings.append(Finding(
+                rule="KERNEL-ERROR", path=f"kernels/{name}",
+                detail=f"error:{type(e).__name__}",
+                message=f"kernel case raised {type(e).__name__}: {e}"))
+            continue
+        findings.extend(fs)
+        info["kernels"].extend(infos)
+    return findings, info

@@ -1,0 +1,368 @@
+"""AST lint pass: repo-specific trace/jit hazard rules (stdlib ``ast``).
+
+Every rule encodes a bug class this repo has actually shipped or is one
+config away from shipping (see DESIGN.md Sec. 10 for the catalog):
+
+  UQ101  Python ``if``/``while``/ternary branching on a traced value
+         inside jitted/Pallas code — silent concretization errors or
+         per-value retraces.
+  UQ102  ``jax.jit`` on a known-hot serving path (decode/chunk/insert/
+         clone/copy/train_step) without ``donate_argnums`` — a
+         pool-sized device copy per step.
+  UQ103  ``*Config``/``*Opts``/``*Params`` dataclasses without
+         ``frozen=True`` — unhashable as static jit args, retrace hazard.
+  UQ104  float-defaulting array constructors (``jnp.zeros`` & co) without
+         an explicit dtype in model/kernel/serve code — silent f32 in
+         bf16 paths.
+  UQ105  int4 packing (``<< 4`` + bitwise or) without a low-nibble mask
+         in the same function — the PR 2 ``pack_int4`` neighbor-corruption
+         bug.
+  UQ106  ``jax`` imports in declared host-only modules (the scheduler and
+         prefix cache must stay trace-free: they mutate python state the
+         tracer would silently bake in).
+  UQ107  jit-wrapped kernel entry points whose shape/branch-determining
+         parameters (``bits``, ``interpret``, block sizes, ...) are
+         missing from ``static_argnames`` — tracer leaks into Python
+         control flow at call time.
+
+Suppress a finding with ``# uniqcheck: ignore[UQ105]`` (or a bare
+``# uniqcheck: ignore``) on the flagged line.  Finding identity is
+``rule:path:stripped-source-line`` — stable under unrelated edits.
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+import re
+from typing import List, Optional
+
+from repro.analysis.findings import Finding
+
+RULES = {
+    "UQ101": "python branch on a traced value in jitted/Pallas code",
+    "UQ102": "hot-path jax.jit without donate_argnums",
+    "UQ103": "Config/Opts/Params dataclass not frozen (unhashable static arg)",
+    "UQ104": "float-defaulting array constructor without explicit dtype",
+    "UQ105": "int4 pack (<< 4 | or) without a low-nibble mask",
+    "UQ106": "jax import in a host-only module",
+    "UQ107": "jit kernel param missing from static_argnames",
+}
+
+# -- rule scopes (path prefixes are repo-relative, '/'-separated) ----------
+TRACED_SCOPE = ("src/repro/kernels/", "src/repro/models/")
+JIT_SCOPE = ("src/repro/serve/", "src/repro/launch/", "benchmarks/")
+DTYPE_SCOPE = ("src/repro/models/", "src/repro/kernels/", "src/repro/serve/")
+KERNEL_SCOPE = ("src/repro/kernels/",)
+HOST_ONLY = ("src/repro/serve/scheduler.py", "src/repro/serve/prefix_cache.py")
+
+HOT_JIT_PATTERN = re.compile(
+    r"decode|chunk|insert|clone|copy|train_step")
+
+# jnp/lax calls that return *static* python values (safe to branch on)
+STATIC_SAFE_CALLS = frozenset({
+    "issubdtype", "result_type", "dtype", "iinfo", "finfo", "ndim",
+    "broadcast_shapes", "canonicalize_dtype",
+})
+TRACED_ROOTS = ("jnp.", "jax.lax.", "lax.", "jax.random.", "jax.nn.",
+                "jax.numpy.")
+
+# constructors that default to float when dtype is omitted; value = index
+# of the positional arg slot that, when present, supplies the dtype
+FLOAT_CONSTRUCTORS = {"zeros": 1, "ones": 1, "empty": 1, "full": 2,
+                      "eye": 2, "linspace": 5}
+
+# kernel params that must be static: they pick shapes, grids or python
+# branches inside the wrapper
+STATIC_HINT_PARAMS = frozenset({
+    "bits", "kv_bits", "k", "interpret", "out_dtype", "bm", "bk", "bn",
+    "block_r", "block_c", "page_size", "logit_cap",
+})
+
+_SUPPRESS = re.compile(r"#\s*uniqcheck:\s*ignore(?:\[([A-Z0-9, ]+)\])?")
+
+
+def _dotted(node: ast.AST) -> Optional[str]:
+    """Attribute/Name chain -> dotted string ("jax.lax.erf_inv"), or None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _line_detail(lines: List[str], lineno: int) -> str:
+    if 1 <= lineno <= len(lines):
+        return re.sub(r"\s+", " ", lines[lineno - 1].strip())
+    return f"L{lineno}"
+
+
+def _suppressed(lines: List[str], lineno: int, rule: str) -> bool:
+    if not (1 <= lineno <= len(lines)):
+        return False
+    m = _SUPPRESS.search(lines[lineno - 1])
+    if not m:
+        return False
+    return m.group(1) is None or rule in {
+        r.strip() for r in m.group(1).split(",")}
+
+
+def _in_scope(relpath: str, prefixes) -> bool:
+    return any(relpath.startswith(p) for p in prefixes)
+
+
+def _finding(findings, lines, relpath, rule, node, message):
+    if _suppressed(lines, node.lineno, rule):
+        return
+    findings.append(Finding(rule=rule, path=relpath,
+                            detail=_line_detail(lines, node.lineno),
+                            message=message, line=node.lineno))
+
+
+# -- UQ101 ------------------------------------------------------------------
+
+def _is_traced_call(node: ast.AST) -> bool:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call):
+            name = _dotted(sub.func)
+            if name and name.startswith(TRACED_ROOTS) \
+                    and name.rsplit(".", 1)[-1] not in STATIC_SAFE_CALLS:
+                return True
+    return False
+
+
+def _check_traced_branch(tree, lines, relpath, findings):
+    if not _in_scope(relpath, TRACED_SCOPE):
+        return
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.If, ast.While, ast.IfExp)):
+            if _is_traced_call(node.test):
+                kind = {ast.If: "if", ast.While: "while",
+                        ast.IfExp: "ternary"}[type(node)]
+                _finding(findings, lines, relpath, "UQ101", node,
+                         f"python `{kind}` branches on a jnp/lax call "
+                         "result; under jit this concretizes a tracer "
+                         "(error) or bakes one trace's value in — use "
+                         "jnp.where / lax.cond")
+
+
+# -- UQ102 ------------------------------------------------------------------
+
+def _check_hot_jit_donate(tree, lines, relpath, findings, source):
+    if not _in_scope(relpath, JIT_SCOPE):
+        return
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        if _dotted(node.func) != "jax.jit" or not node.args:
+            continue
+        if any(kw.arg == "donate_argnums" for kw in node.keywords):
+            continue
+        target_src = ast.get_source_segment(source, node.args[0]) or ""
+        if HOT_JIT_PATTERN.search(target_src):
+            _finding(findings, lines, relpath, "UQ102", node,
+                     f"hot serving path `jax.jit({target_src.strip()})` "
+                     "without donate_argnums: the cache/pool buffer is "
+                     "copied instead of donated every step")
+
+
+# -- UQ103 ------------------------------------------------------------------
+
+def _check_frozen_config(tree, lines, relpath, findings):
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.ClassDef):
+            continue
+        if not node.name.endswith(("Config", "Opts", "Params")):
+            continue
+        for dec in node.decorator_list:
+            name = _dotted(dec.func) if isinstance(dec, ast.Call) \
+                else _dotted(dec)
+            if name not in ("dataclasses.dataclass", "dataclass"):
+                continue
+            frozen = isinstance(dec, ast.Call) and any(
+                kw.arg == "frozen"
+                and isinstance(kw.value, ast.Constant)
+                and kw.value.value is True
+                for kw in dec.keywords)
+            if not frozen:
+                _finding(findings, lines, relpath, "UQ103", node,
+                         f"dataclass {node.name} is not frozen=True: "
+                         "config objects reaching jit must be hashable "
+                         "static args (retrace hazard otherwise)")
+
+
+# -- UQ104 ------------------------------------------------------------------
+
+def _check_dtype_less(tree, lines, relpath, findings):
+    if not _in_scope(relpath, DTYPE_SCOPE):
+        return
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = _dotted(node.func)
+        if not name or not name.startswith(("jnp.", "jax.numpy.")):
+            continue
+        short = name.rsplit(".", 1)[-1]
+        if short not in FLOAT_CONSTRUCTORS:
+            continue
+        if any(kw.arg == "dtype" for kw in node.keywords):
+            continue
+        if len(node.args) > FLOAT_CONSTRUCTORS[short]:
+            continue        # dtype passed positionally
+        _finding(findings, lines, relpath, "UQ104", node,
+                 f"`{name}` without an explicit dtype defaults to f32 — "
+                 "annotate the dtype so bf16 serving paths stay bf16")
+
+
+# -- UQ105 ------------------------------------------------------------------
+
+def _check_int4_mask(tree, lines, relpath, findings):
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.FunctionDef):
+            continue
+        shifts, has_or, has_mask = [], False, False
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.BinOp):
+                if isinstance(sub.op, ast.LShift) \
+                        and isinstance(sub.right, ast.Constant) \
+                        and sub.right.value == 4:
+                    shifts.append(sub)
+                elif isinstance(sub.op, ast.BitOr):
+                    has_or = True
+                elif isinstance(sub.op, ast.BitAnd):
+                    for side in (sub.left, sub.right):
+                        if isinstance(side, ast.Constant) \
+                                and side.value == 0x0F:
+                            has_mask = True
+        if shifts and has_or and not has_mask:
+            _finding(findings, lines, relpath, "UQ105", shifts[0],
+                     f"{node.name}: packs nibbles (`<< 4` + `|`) without "
+                     "an `& 0x0F` low-nibble mask — codes >= 16 bleed "
+                     "into the neighbor nibble (the PR 2 pack_int4 bug)")
+
+
+# -- UQ106 ------------------------------------------------------------------
+
+def _check_host_purity(tree, lines, relpath, findings):
+    if relpath not in HOST_ONLY:
+        return
+    for node in ast.walk(tree):
+        mods = []
+        if isinstance(node, ast.Import):
+            mods = [a.name for a in node.names]
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            mods = [node.module]
+        for mod in mods:
+            if mod == "jax" or mod.startswith("jax."):
+                _finding(findings, lines, relpath, "UQ106", node,
+                         f"host-only module imports `{mod}`: the "
+                         "scheduler/prefix cache run inside the engine's "
+                         "host loop and must never build traced values")
+
+
+# -- UQ107 ------------------------------------------------------------------
+
+def _jit_static_argnames(dec: ast.AST):
+    """Decorator node -> (is_jit, static_argnames set) for
+    ``@jax.jit`` / ``@functools.partial(jax.jit, static_argnames=...)``."""
+    if _dotted(dec) == "jax.jit":
+        return True, frozenset()
+    if not isinstance(dec, ast.Call):
+        return False, frozenset()
+    name = _dotted(dec.func)
+    if name == "jax.jit":
+        call = dec
+    elif name in ("functools.partial", "partial") and dec.args \
+            and _dotted(dec.args[0]) == "jax.jit":
+        call = dec
+    else:
+        return False, frozenset()
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            names = set()
+            for sub in ast.walk(kw.value):
+                if isinstance(sub, ast.Constant) \
+                        and isinstance(sub.value, str):
+                    names.add(sub.value)
+            return True, frozenset(names)
+    return True, frozenset()
+
+
+def _check_static_hints(tree, lines, relpath, findings):
+    if not _in_scope(relpath, KERNEL_SCOPE):
+        return
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.FunctionDef):
+            continue
+        for dec in node.decorator_list:
+            is_jit, static = _jit_static_argnames(dec)
+            if not is_jit:
+                continue
+            params = [a.arg for a in node.args.args
+                      + node.args.kwonlyargs]
+            for p in params:
+                if p in STATIC_HINT_PARAMS and p not in static:
+                    _finding(findings, lines, relpath, "UQ107", node,
+                             f"{node.name}: param `{p}` selects shapes/"
+                             "branches but is missing from "
+                             "static_argnames — it would arrive traced")
+
+
+# -- driver -----------------------------------------------------------------
+
+_CHECKS_WITH_SOURCE = (_check_hot_jit_donate,)
+_CHECKS = (_check_traced_branch, _check_frozen_config, _check_dtype_less,
+           _check_int4_mask, _check_host_purity, _check_static_hints)
+
+
+def lint_source(source: str, relpath: str) -> List[Finding]:
+    """Lint one file's source under its repo-relative path (rule scopes
+    key off the path, so tests can target a rule by choosing it)."""
+    tree = ast.parse(source)
+    lines = source.splitlines()
+    findings: List[Finding] = []
+    for check in _CHECKS:
+        check(tree, lines, relpath, findings)
+    for check in _CHECKS_WITH_SOURCE:
+        check(tree, lines, relpath, findings, source)
+    return findings
+
+
+def repo_root() -> str:
+    """/root/repo given this file at src/repro/analysis/lint.py."""
+    return os.path.abspath(os.path.join(os.path.dirname(__file__),
+                                        *[os.pardir] * 3))
+
+
+def iter_python_files(root: str):
+    for top in ("src", "benchmarks", "experiments"):
+        base = os.path.join(root, top)
+        if not os.path.isdir(base):
+            continue
+        for dirpath, dirnames, filenames in os.walk(base):
+            dirnames[:] = [d for d in dirnames
+                           if d not in ("__pycache__", ".git")]
+            for fn in sorted(filenames):
+                if fn.endswith(".py"):
+                    full = os.path.join(dirpath, fn)
+                    yield full, os.path.relpath(full, root).replace(
+                        os.sep, "/")
+
+
+def run_lint(root: Optional[str] = None) -> List[Finding]:
+    root = root or repo_root()
+    findings: List[Finding] = []
+    for full, rel in iter_python_files(root):
+        with open(full) as fh:
+            src = fh.read()
+        try:
+            findings.extend(lint_source(src, rel))
+        except SyntaxError as e:      # pragma: no cover - broken file
+            findings.append(Finding(rule="UQ100", path=rel,
+                                    detail=f"syntax:{e.lineno}",
+                                    message=f"unparseable: {e}",
+                                    line=e.lineno or 0))
+    return findings

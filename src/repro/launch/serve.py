@@ -93,7 +93,11 @@ def run_engine_stream(params, cfg, opts, args) -> dict:
                       total_pages=args.total_pages, kv_bits=args.kv_bits,
                       pool_bytes=args.pool_bytes,
                       prefix_cache=args.prefix_cache,
-                      prefill_chunk=args.prefill_chunk)
+                      prefill_chunk=args.prefill_chunk,
+                      checkify=args.checkify)
+    if args.checkify:
+        print("[engine] checkify sanitizer ON (index OOB + NaN checks per "
+              "jitted step; debug mode — expect a host sync per step)")
     eng = Engine(params, cfg, opts, ec)
     if args.cache_mode == "paged":
         sch = eng.scheduler
@@ -292,7 +296,18 @@ def main(argv=None):
     p.add_argument("--min-cow-copies", type=int, default=0,
                    help="fail unless at least this many copy-on-writes "
                         "happened (CI smoke of the divergence path)")
+    # opt-in debug sanitizers (both OFF by default; DESIGN.md Sec. 10)
+    p.add_argument("--checkify", action="store_true",
+                   help="wrap the engine's jitted steps with "
+                        "jax.experimental.checkify index-OOB + NaN "
+                        "checks (debug runs; slow — host sync per step)")
+    p.add_argument("--debug-nans", action="store_true",
+                   help="enable jax_debug_nans globally (first NaN "
+                        "raises with a traceback; debug runs only)")
     args = p.parse_args(argv)
+
+    if args.debug_nans:
+        jax.config.update("jax_debug_nans", True)
 
     cfg = cb.get_smoke(args.arch) if args.smoke else cb.get(args.arch)
     opts = ModelOpts(compute_dtype=jnp.float32, remat=False,

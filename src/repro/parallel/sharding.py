@@ -43,19 +43,46 @@ def _fit(spec: P, shape, mesh: Mesh) -> P:
     return P(*out)
 
 
-def _param_spec(path: str, shape, cfg: ArchConfig, fsdp, mesh: Mesh,
-                expert_mode: str = "gather") -> P:
+# Parameter leaves that are *deliberately* replicated: norms, biases and
+# per-head scalar vectors.  The static-analysis coverage audit
+# (repro.analysis.compile_audit) requires every leaf of every substrate to
+# classify to either a named weight rule below or this list — an unknown
+# leaf falling through silently is exactly how the PR 3 ``q_lut`` gap
+# happened, so "no rule" is a finding, not a default.
+REPLICATED_PARAMS = frozenset({
+    "attn_norm", "mlp_norm", "cross_norm", "post_attn_norm",
+    "post_mlp_norm", "pre_norm", "final_norm", "enc_final_norm",
+    "scale", "bias",                  # LayerNorm dict leaves
+    "dt_bias", "A_log", "D",          # mamba per-head scalars
+})
+
+
+def param_rule_spec(path: str, shape, cfg: ArchConfig, fsdp, mesh,
+                    expert_mode: str = "gather"):
+    """Classify one parameter leaf: -> (rule_name, unfitted PartitionSpec).
+
+    ``rule_name`` is the named rule that matched ("wq", "replicated",
+    "q_lut", ...) or ``None`` when the leaf fell through to the implicit
+    replicated fallback.  The compile audit treats ``None`` as a coverage
+    finding; ``param_shardings`` treats it as replicated exactly as before.
+    ``mesh`` may be None for classification-only callers (no pod check).
+    """
     # quantized-weight leaves inherit the parent weight's rule: q_codes has
     # the weight's shape (last dim halved for int4 — _fit re-validates);
-    # q_mu/q_sigma are (.., 1, C) stats and q_lut is a (k,)/(L, k)
-    # codebook, whose non-divisible dims fall replicated.
+    # q_mu/q_sigma are (.., 1, C) stats whose non-divisible dims fall
+    # replicated.
     parts = path.split("/")
-    if parts[-1] in ("q_codes", "q_mu", "q_sigma", "q_lut") \
-            and len(parts) >= 2:
+    if parts[-1] == "q_lut":
+        # Codebook (k,) / (L, k): every device needs all k levels for the
+        # LUT dequant gather — inheriting the parent weight's rule would
+        # shard the level axis (k divides common mesh extents) and force a
+        # gather per use.  Explicitly replicated.
+        return "q_lut", P()
+    if parts[-1] in ("q_codes", "q_mu", "q_sigma") and len(parts) >= 2:
         path = "/".join(parts[:-1])
     if fsdp is True:
         d = "data"
-    elif fsdp == "pod" and "pod" in mesh.axis_names:
+    elif fsdp == "pod" and mesh is not None and "pod" in mesh.axis_names:
         d = ("data", "pod")   # ZeRO-3 across DCN too (1T-param cells)
     elif fsdp:
         d = "data"
@@ -66,36 +93,43 @@ def _param_spec(path: str, shape, cfg: ArchConfig, fsdp, mesh: Mesh,
     name = path.split("/")[-1]
 
     if name == "embed":
-        return P("model", d)
+        return name, P("model", d)
     if name == "lm_head":
-        return P(d, "model")
+        return name, P(d, "model")
     if name in ("wq", "wk", "wv", "cross_wq", "cross_wk", "cross_wv"):
-        return P(*lead, d, "model")
+        return name, P(*lead, d, "model")
     if name in ("wo", "cross_wo"):
-        return P(*lead, "model", d)
+        return name, P(*lead, "model", d)
     if name in ("w_gate", "w_up"):
-        return P(*lead, d, "model")
+        return name, P(*lead, d, "model")
     if name == "w_down":
-        return P(*lead, "model", d)
+        return name, P(*lead, "model", d)
     if name in ("eg", "eu"):          # (L, E, d, f): experts on model
         if expert_mode == "reduce":   # FSDP on f (partial-f compute)
-            return P(*lead, "model", None, d)
-        return P(*lead, "model", d, None)
+            return name, P(*lead, "model", None, d)
+        return name, P(*lead, "model", d, None)
     if name == "ed":                  # (L, E, f, d)
         if expert_mode == "reduce":
-            return P(*lead, "model", d, None)
-        return P(*lead, "model", None, d)
+            return name, P(*lead, "model", d, None)
+        return name, P(*lead, "model", None, d)
     if name == "router":
-        return P(*lead, d, None)
+        return name, P(*lead, d, None)
     if name == "in_proj":             # (L, d, proj): d_inner on model
-        return P(*lead, d, "model")
+        return name, P(*lead, d, "model")
     if name == "out_proj":            # (L, d_inner, d)
-        return P(*lead, "model", d)
+        return name, P(*lead, "model", d)
     if name in ("conv_w",):           # (L, C, w)
-        return P(*lead, "model", None)
+        return name, P(*lead, "model", None)
     if name in ("conv_b", "norm_scale"):
-        return P(*lead, "model")
-    return P()                        # norms, scalars: replicated
+        return name, P(*lead, "model")
+    if name in REPLICATED_PARAMS:
+        return "replicated", P()
+    return None, P()                  # uncovered: audit finding
+
+
+def _param_spec(path: str, shape, cfg: ArchConfig, fsdp, mesh: Mesh,
+                expert_mode: str = "gather") -> P:
+    return param_rule_spec(path, shape, cfg, fsdp, mesh, expert_mode)[1]
 
 
 def _tree_paths(tree):

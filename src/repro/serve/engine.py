@@ -105,6 +105,13 @@ class EngineConfig:
     # pages per prefill chunk (paged mode): prompts prefill chunk-by-chunk
     # interleaved with decode steps instead of one whole padded prefill.
     # None with prefix_cache=True defaults to 1 page per chunk.
+    checkify: bool = False
+    # opt-in debug sanitizer (OFF by default — it forces a host sync and
+    # error bookkeeping per step): wraps every jitted step with
+    # jax.experimental.checkify index-OOB + NaN checks, so a bad block
+    # table / position or a NaN in logits raises at the offending step
+    # instead of corrupting the pool silently.  --checkify on
+    # launch/serve.py and benchmarks/engine_bench.py.
 
 
 @dataclasses.dataclass
@@ -253,14 +260,34 @@ class Engine:
         def copy_fn(cache, src, dst):
             return kv_cache.clone_pages(cache, src, dst)
 
-        self._decode_step = jax.jit(
-            decode_paged if self.paged else decode_slot, donate_argnums=(1,))
-        self._prefill_step = jax.jit(prefill_fn)
-        self._cache_insert = jax.jit(
+        def _jit(fn, donate=()):
+            """jit a step fn; with ec.checkify, route it through
+            jax.experimental.checkify (index OOB + NaN) first.  The
+            checkified fn keeps the positional signature, so
+            donate_argnums indices carry over unchanged; the python shim
+            throws the accumulated error after each call (a host sync —
+            debug mode only)."""
+            if not ec.checkify:
+                return jax.jit(fn, donate_argnums=donate)
+            from jax.experimental import checkify as _ck
+            errs = _ck.index_checks | _ck.nan_checks
+            checked = jax.jit(_ck.checkify(fn, errors=errs),
+                              donate_argnums=donate)
+
+            def shim(*args):
+                err, out = checked(*args)
+                _ck.check_error(err)
+                return out
+            return shim
+
+        self._decode_step = _jit(
+            decode_paged if self.paged else decode_slot, donate=(1,))
+        self._prefill_step = _jit(prefill_fn)
+        self._cache_insert = _jit(
             model.cache_insert_paged if self.paged else model.cache_insert,
-            donate_argnums=(0,))
-        self._chunk_step = jax.jit(chunk_fn, donate_argnums=(1,))
-        self._copy_pages = jax.jit(copy_fn, donate_argnums=(0,))
+            donate=(0,))
+        self._chunk_step = _jit(chunk_fn, donate=(1,))
+        self._copy_pages = _jit(copy_fn, donate=(0,))
 
     # -- request side ------------------------------------------------------
 

