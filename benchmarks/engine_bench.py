@@ -55,6 +55,7 @@ from repro.models import kv_cache as kvq
 from repro.models import model
 from repro.models.lm import ModelOpts
 from repro.serve import serve as serve_lib
+from repro.serve import telemetry as tele_lib
 from repro.serve.engine import Engine, EngineConfig, Request, SamplingParams
 from repro.serve.scheduler import bucket_len, pages_for
 
@@ -123,7 +124,7 @@ def _stats(eng, outs, dt, occupancy, peak):
     toks = sum(len(o.token_ids) for o in outs)
     ttfts = [o.ttft_s for o in outs]
     s = eng.stats()
-    return {
+    d = {
         "tok_s": round(toks / dt, 1),
         "peak_concurrency": peak,
         "mean_occupancy": round(float(np.mean(occupancy)), 2)
@@ -139,6 +140,18 @@ def _stats(eng, outs, dt, occupancy, peak):
         "cow_copies": s["cow_copies"],
         "prefill_tokens": eng.n_prefill_tokens,
     }
+    # tail latencies from the engine's own histograms (serve/telemetry.py):
+    # pins the full TTFT/ITL/queue-wait tails per PR in BENCH_engine.json
+    # (setdefault: the exact sample ttft_p99_s above wins over the
+    # bucket-interpolated histogram estimate)
+    if eng.telemetry.enabled:
+        reg = eng.telemetry.registry
+        for hname, prefix in (("ttft_s", "ttft"), ("itl_s", "itl"),
+                              ("queue_wait_s", "queue_wait")):
+            if hname in reg:
+                for q, v in tele_lib.percentile_summary(reg[hname]).items():
+                    d.setdefault(f"{prefix}_{q}_s", v)
+    return d
 
 
 def bench_engine(params, cfg, opts, ec: EngineConfig, n_requests=N_REQUESTS,
@@ -406,6 +419,47 @@ def run(arch="granite_3_8b", collect=None, seed=0, checkify=False):
         # the KV sweep once, on the quantized-weight engine)
         if w_bits != 4:
             continue
+        # telemetry overhead A/B (acceptance: tok/s within 2% of
+        # disabled; telemetry is host-side O(1)/step, so any real gap is
+        # a regression).  Fresh-engine trials scatter +-10% from CPU
+        # scheduling noise on a ~0.25s drain — useless for resolving a
+        # ~1% cost — so both engines are built and warmed ONCE (compile
+        # excluded), measured waves interleave the two arms, and each
+        # arm keeps its best tok/s: the max strips the one-sided
+        # slowdowns (preemption by other processes) that medians of
+        # independent trials cannot.
+        ab_engines = {}
+        for tel_on in (True, False):
+            ec = mk_ec(max_slots=8, max_len=64, prefill_batch=4,
+                       cache_mode="paged", page_size=8, telemetry=tel_on)
+            eng = Engine(params, cfg, opts, ec)
+            eng.generate(_requests(cfg.vocab, 2, seed=seed))
+            ab_engines[tel_on] = eng
+        best = {True: 0.0, False: 0.0}
+        for _rep in range(8):
+            for tel_on in (True, False):
+                eng = ab_engines[tel_on]
+                eng.flush_prefix_cache()
+                eng.reset_stats()
+                reqs = _requests(cfg.vocab, 32, seed=seed)
+                for r in reqs:
+                    eng.submit(r)
+                outs, dt, _, _ = _drain(eng)
+                assert len(outs) == len(reqs)
+                toks = sum(len(o.token_ids) for o in outs)
+                best[tel_on] = max(best[tel_on], toks / dt)
+        ab = {}
+        for tel_on in (True, False):
+            tps = best[tel_on]
+            ab[f"tok_s_telemetry_{'on' if tel_on else 'off'}"] = \
+                round(tps, 1)
+            yield (f"engine_w{w_bits}_telemetry_{'on' if tel_on else 'off'}",
+                   1e6 / tps, round(tps, 1))
+        ab["overhead_pct"] = round(
+            100.0 * (ab["tok_s_telemetry_off"] - ab["tok_s_telemetry_on"])
+            / max(ab["tok_s_telemetry_off"], 1e-9), 2)
+        if collect is not None:
+            collect["telemetry_overhead"] = ab
         for kv_bits, pool_bytes, ec in kv_sweep_configs(cfg):
             ec = dataclasses.replace(ec, checkify=checkify)
             dt, tps, peak, stats = bench_engine(params, cfg, opts, ec,

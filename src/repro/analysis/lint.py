@@ -24,6 +24,11 @@ config away from shipping (see DESIGN.md Sec. 10 for the catalog):
          parameters (``bits``, ``interpret``, block sizes, ...) are
          missing from ``static_argnames`` — tracer leaks into Python
          control flow at call time.
+  UQ108  wall-clock reads (``time.perf_counter``/``time.time``/...)
+         inside traced code paths (kernels/, models/) — under jit the
+         call fires once at trace time and the value is baked into the
+         compiled graph; timing belongs in the host-side telemetry
+         layer (serve/telemetry.py).
 
 Suppress a finding with ``# uniqcheck: ignore[UQ105]`` (or a bare
 ``# uniqcheck: ignore``) on the flagged line.  Finding identity is
@@ -47,6 +52,7 @@ RULES = {
     "UQ105": "int4 pack (<< 4 | or) without a low-nibble mask",
     "UQ106": "jax import in a host-only module",
     "UQ107": "jit kernel param missing from static_argnames",
+    "UQ108": "wall-clock read in traced code (time belongs in telemetry)",
 }
 
 # -- rule scopes (path prefixes are repo-relative, '/'-separated) ----------
@@ -54,7 +60,8 @@ TRACED_SCOPE = ("src/repro/kernels/", "src/repro/models/")
 JIT_SCOPE = ("src/repro/serve/", "src/repro/launch/", "benchmarks/")
 DTYPE_SCOPE = ("src/repro/models/", "src/repro/kernels/", "src/repro/serve/")
 KERNEL_SCOPE = ("src/repro/kernels/",)
-HOST_ONLY = ("src/repro/serve/scheduler.py", "src/repro/serve/prefix_cache.py")
+HOST_ONLY = ("src/repro/serve/scheduler.py", "src/repro/serve/prefix_cache.py",
+             "src/repro/serve/telemetry.py")
 
 HOT_JIT_PATTERN = re.compile(
     r"decode|chunk|insert|clone|copy|train_step")
@@ -311,11 +318,37 @@ def _check_static_hints(tree, lines, relpath, findings):
                              "static_argnames — it would arrive traced")
 
 
+# -- UQ108 ------------------------------------------------------------------
+
+# clock calls whose trace-time value would be baked into a jitted graph
+WALL_CLOCK_CALLS = frozenset({
+    "time.perf_counter", "time.perf_counter_ns",
+    "time.time", "time.time_ns",
+    "time.monotonic", "time.monotonic_ns",
+})
+
+
+def _check_wall_clock(tree, lines, relpath, findings):
+    if not _in_scope(relpath, TRACED_SCOPE):
+        return
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = _dotted(node.func)
+        if name in WALL_CLOCK_CALLS:
+            _finding(findings, lines, relpath, "UQ108", node,
+                     f"`{name}()` in traced code: under jit it runs once "
+                     "at trace time and the stale value is baked into the "
+                     "compiled graph — time host-side around the synced "
+                     "step (serve/telemetry.py) instead")
+
+
 # -- driver -----------------------------------------------------------------
 
 _CHECKS_WITH_SOURCE = (_check_hot_jit_donate,)
 _CHECKS = (_check_traced_branch, _check_frozen_config, _check_dtype_less,
-           _check_int4_mask, _check_host_purity, _check_static_hints)
+           _check_int4_mask, _check_host_purity, _check_static_hints,
+           _check_wall_clock)
 
 
 def lint_source(source: str, relpath: str) -> List[Finding]:

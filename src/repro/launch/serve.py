@@ -43,6 +43,7 @@ agreement with the bf16 model.
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -53,6 +54,7 @@ from repro.configs import base as cb
 from repro.models import model
 from repro.models.lm import ModelOpts
 from repro.serve import serve as serve_lib
+from repro.serve import telemetry as tele_lib
 from repro.serve.engine import Engine, EngineConfig, Request, SamplingParams
 
 
@@ -94,7 +96,9 @@ def run_engine_stream(params, cfg, opts, args) -> dict:
                       pool_bytes=args.pool_bytes,
                       prefix_cache=args.prefix_cache,
                       prefill_chunk=args.prefill_chunk,
-                      checkify=args.checkify)
+                      checkify=args.checkify,
+                      telemetry=not args.no_telemetry,
+                      profile_annotations=args.profile_annotations)
     if args.checkify:
         print("[engine] checkify sanitizer ON (index OOB + NaN checks per "
               "jitted step; debug mode — expect a host sync per step)")
@@ -210,6 +214,38 @@ def run_engine_stream(params, cfg, opts, args) -> dict:
         raise SystemExit(
             f"lost requests: {eng.scheduler.n_submitted} submitted, "
             f"{stats['requests']} completed")
+
+    # -- telemetry exports (the traceview/CI consumables) -------------------
+    if eng.telemetry.enabled:
+        reg = eng.telemetry.registry
+        itl = tele_lib.percentile_summary(reg["itl_s"], scale=1e3)
+        qw = tele_lib.percentile_summary(reg["queue_wait_s"], scale=1e3)
+        print(f"[engine] ITL p50 {itl['p50']:.1f}ms p95 {itl['p95']:.1f}ms "
+              f"p99 {itl['p99']:.1f}ms; queue wait p50 {qw['p50']:.1f}ms "
+              f"p95 {qw['p95']:.1f}ms")
+        stats.update({f"itl_{k}_ms": v for k, v in itl.items()})
+        stats.update({f"queue_wait_{k}_ms": v for k, v in qw.items()})
+    if args.metrics_out or args.trace_out:
+        # the driver knows what the engine doesn't: quantizer + workload
+        meta = {"w_bits": args.w_bits, "a_bits": args.a_bits,
+                "dist": args.w_dist, "smoke": args.smoke,
+                "rate": args.rate, "requests": args.requests,
+                "shared_prefix": args.shared_prefix}
+        if args.metrics_out:
+            snap = eng.metrics_snapshot(meta)
+            with open(args.metrics_out, "w") as fh:
+                json.dump(snap, fh, indent=2, sort_keys=True)
+            with open(args.metrics_out + ".prom", "w") as fh:
+                fh.write(eng.telemetry.registry.to_prometheus())
+            print(f"[engine] metrics snapshot -> {args.metrics_out} "
+                  f"(+ .prom exposition)")
+        if args.trace_out:
+            trace = eng.chrome_trace()
+            with open(args.trace_out, "w") as fh:
+                json.dump(trace, fh)
+            print(f"[engine] chrome trace -> {args.trace_out} "
+                  f"({len(trace['traceEvents'])} events; load in "
+                  f"chrome://tracing or ui.perfetto.dev)")
     return stats
 
 
@@ -296,6 +332,20 @@ def main(argv=None):
     p.add_argument("--min-cow-copies", type=int, default=0,
                    help="fail unless at least this many copy-on-writes "
                         "happened (CI smoke of the divergence path)")
+    # observability (serve/telemetry.py; DESIGN.md Sec. 11)
+    p.add_argument("--metrics-out", default=None, metavar="PATH",
+                   help="write the metrics snapshot JSON here (plus the "
+                        "Prometheus text exposition at PATH.prom)")
+    p.add_argument("--trace-out", default=None, metavar="PATH",
+                   help="write the Chrome-trace JSON of the run here "
+                        "(open in chrome://tracing / ui.perfetto.dev)")
+    p.add_argument("--no-telemetry", action="store_true",
+                   help="disable metrics + tracing (A/B the overhead; "
+                        "token streams are bit-identical either way)")
+    p.add_argument("--profile-annotations", action="store_true",
+                   help="wrap the jitted engine steps in jax.profiler "
+                        "TraceAnnotations (names show up in device "
+                        "profiles captured by jax.profiler)")
     # opt-in debug sanitizers (both OFF by default; DESIGN.md Sec. 10)
     p.add_argument("--checkify", action="store_true",
                    help="wrap the engine's jitted steps with "
@@ -305,6 +355,12 @@ def main(argv=None):
                    help="enable jax_debug_nans globally (first NaN "
                         "raises with a traceback; debug runs only)")
     args = p.parse_args(argv)
+
+    if (args.metrics_out or args.trace_out) and not args.engine:
+        p.error("--metrics-out/--trace-out require --engine")
+    if (args.metrics_out or args.trace_out) and args.no_telemetry:
+        p.error("--metrics-out/--trace-out need telemetry enabled "
+                "(drop --no-telemetry)")
 
     if args.debug_nans:
         jax.config.update("jax_debug_nans", True)

@@ -70,6 +70,7 @@ from repro.configs.base import ArchConfig
 from repro.models import kv_cache
 from repro.models import model
 from repro.models.lm import ModelOpts
+from repro.serve import telemetry as tele_lib
 from repro.serve.scheduler import (Request, SamplingParams, ScheduledSeq,
                                    Scheduler, Sequence, pages_for)
 
@@ -112,6 +113,22 @@ class EngineConfig:
     # table / position or a NaN in logits raises at the offending step
     # instead of corrupting the pool silently.  --checkify on
     # launch/serve.py and benchmarks/engine_bench.py.
+    telemetry: bool = True
+    # structured observability (serve/telemetry.py, DESIGN.md Sec. 11):
+    # latency/queue histograms, occupancy gauges and per-step spans in a
+    # bounded ring buffer, exportable as a metrics snapshot + Chrome
+    # trace.  Host-side and O(1) per step; token streams are bit-
+    # identical on/off (pinned in tests) and the tok/s overhead is
+    # pinned in BENCH_engine.json.  False = the null object: same code
+    # path, records nothing.
+    trace_capacity: int = 65536
+    # span/instant ring-buffer capacity; oldest whole spans drop first
+    # (the export never emits an orphaned half-span)
+    profile_annotations: bool = False
+    # wrap the jitted steps in jax.profiler.TraceAnnotation so engine
+    # phases show up named inside device profiles (jax.profiler.trace /
+    # TensorBoard).  OFF by default: it adds a host-side annotation per
+    # call even when no profiler is attached.
 
 
 @dataclasses.dataclass
@@ -221,6 +238,41 @@ class Engine:
         # KV utilization accumulators (paged): valid rows vs held page rows
         self._util_tokens = 0
         self._util_page_tokens = 0
+        self._last_decode_end: Optional[float] = None  # ITL anchor
+
+        # -- telemetry (DESIGN.md Sec. 11): histograms observed on the
+        # hot path are O(1) bisects; everything state-shaped is a gauge
+        # refreshed by the collector at snapshot time only
+        self.telemetry = tele_lib.Telemetry(enabled=ec.telemetry,
+                                            trace_capacity=ec.trace_capacity)
+        reg = self.telemetry.registry
+        self._m_ttft = reg.histogram("ttft_s", help="arrival -> first token")
+        self._m_itl = reg.histogram(
+            "itl_s", help="gap between consecutive decode steps "
+            "(= inter-token latency for every active sequence)")
+        self._m_queue_wait = reg.histogram(
+            "queue_wait_s", help="arrival -> admission")
+        self._m_e2e = reg.histogram("e2e_latency_s",
+                                    help="arrival -> completion")
+        self._m_decode_step = reg.histogram(
+            "decode_step_s", help="jitted decode step incl. host sync")
+        self._m_prefill_call = reg.histogram(
+            "prefill_call_s", help="batched whole-prompt prefill call")
+        self._m_chunk_call = reg.histogram(
+            "prefill_chunk_s", help="single chunked-prefill call")
+        self._m_batch = reg.histogram(
+            "decode_batch", tele_lib.linear_buckets(0, 1, ec.max_slots),
+            help="active decode slots per step")
+        self._m_tok_decode = reg.counter(
+            "tokens_decoded", help="tokens sampled by decode steps")
+        self._m_tok_prefill_step = reg.counter(
+            "prefill_step_tokens",
+            help="prompt tokens run while decode slots were active "
+            "(chunked-prefill interleaving)")
+        reg.counter("requests_submitted")
+        for reason in ("stop", "length", "evicted"):
+            reg.counter(f"requests_finished_{reason}")
+        self.telemetry.registry.add_collector(self._collect_gauges)
 
         cfg_, opts_ = self.cfg, self.opts
 
@@ -280,21 +332,74 @@ class Engine:
                 return out
             return shim
 
-        self._decode_step = _jit(
-            decode_paged if self.paged else decode_slot, donate=(1,))
-        self._prefill_step = _jit(prefill_fn)
-        self._cache_insert = _jit(
+        def _annot(fn, name):
+            """With ec.profile_annotations, name the step inside device
+            profiles (jax.profiler.trace / TensorBoard) so engine phases
+            line up with the host-side Chrome trace spans."""
+            if not ec.profile_annotations:
+                return fn
+
+            def wrapped(*args):
+                with jax.profiler.TraceAnnotation(name):
+                    return fn(*args)
+            return wrapped
+
+        self._decode_step = _annot(_jit(
+            decode_paged if self.paged else decode_slot, donate=(1,)),
+            "engine.decode")
+        self._prefill_step = _annot(_jit(prefill_fn), "engine.prefill")
+        self._cache_insert = _annot(_jit(
             model.cache_insert_paged if self.paged else model.cache_insert,
-            donate=(0,))
-        self._chunk_step = _jit(chunk_fn, donate=(1,))
-        self._copy_pages = _jit(copy_fn, donate=(0,))
+            donate=(0,)), "engine.cache_insert")
+        self._chunk_step = _annot(_jit(chunk_fn, donate=(1,)),
+                                  "engine.prefill_chunk")
+        self._copy_pages = _annot(_jit(copy_fn, donate=(0,)), "engine.cow")
+
+    def _collect_gauges(self) -> None:
+        """Snapshot-time collector: mirror engine/scheduler state into the
+        registry.  Never runs on the hot path."""
+        s = self.scheduler
+        reg = self.telemetry.registry
+        reg.counter("decode_steps").value = self.n_decode_steps
+        reg.counter("prefill_calls").value = self.n_prefill_calls
+        reg.counter("prefill_tokens").value = self.n_prefill_tokens
+        reg.counter("prompt_tokens").value = self.n_prompt_tokens
+        reg.counter("kv_rows_attended").value = self._util_tokens
+        reg.counter("kv_page_rows_held").value = self._util_page_tokens
+        reg.counter("requests_completed").value = s.n_completed
+        reg.counter("preemptions").value = s.n_preemptions
+        reg.counter("cache_lookups").value = s.n_cache_lookups
+        reg.counter("cache_hits").value = s.n_cache_hits
+        reg.counter("cache_hit_tokens").value = s.n_cache_hit_tokens
+        reg.counter("cache_hit_pages").value = s.n_cache_hit_pages
+        reg.counter("cow_copies").value = s.n_cow_copies
+        reg.counter("cache_evictions").value = s.n_cache_evictions
+        reg.counter("trace_spans_dropped").value = \
+            self.telemetry.tracer.n_dropped
+        reg.gauge("slots_running").set(s.n_running)
+        reg.gauge("slots_prefilling").set(len(self._prefilling))
+        reg.gauge("queue_depth").set(s.n_waiting)
+        reg.gauge("kv_utilization").set(self.kv_utilization)
+        if self.paged:
+            reg.gauge("pages_in_use").set(s.pages_in_use)
+            reg.gauge("pages_free").set(s.n_free_pages)
+            reg.gauge("bytes_in_use").set(s.bytes_in_use)
+            reg.gauge("pool_bytes_total").set(s.pool_bytes_total)
+            reg.gauge("cached_pages").set(s.cached_pages)
+            if s.prefix_cache is not None:
+                reg.gauge("prefix_cache_nodes").set(s.prefix_cache.n_nodes)
 
     # -- request side ------------------------------------------------------
 
     def submit(self, request: Request) -> None:
-        if request.arrival_time == 0.0:
+        # None (not a 0.0 sentinel) means "unset": a driver that really
+        # measured an arrival at t=0.0 keeps it, and TTFT is always
+        # anchored at true arrival
+        if request.arrival_time is None:
             request.arrival_time = time.perf_counter()
         self.scheduler.submit(request)
+        self.telemetry.inc(
+            self.telemetry.registry.counter("requests_submitted"))
 
     def reset_stats(self) -> None:
         """Zero perf counters (e.g. after a compile-warmup request); the
@@ -305,6 +410,8 @@ class Engine:
         self.n_prompt_tokens = 0
         self._util_tokens = 0
         self._util_page_tokens = 0
+        self._last_decode_end = None
+        self.telemetry.reset()
         self.scheduler.n_submitted = 0
         self.scheduler.n_completed = 0
         self.scheduler.n_evicted = 0
@@ -323,18 +430,48 @@ class Engine:
         return self.scheduler.flush_prefix_cache()
 
     def stats(self) -> dict:
-        """Scheduler/engine counters for perf reports and CI assertions."""
-        s = self.scheduler
-        return {
-            "preemptions": s.n_preemptions,
-            "cache_lookups": s.n_cache_lookups,
-            "cache_hits": s.n_cache_hits,
-            "cache_hit_tokens": s.n_cache_hit_tokens,
-            "cache_hit_pages": s.n_cache_hit_pages,
-            "cow_copies": s.n_cow_copies,
-            "cache_evictions": s.n_cache_evictions,
-            "cached_pages": s.cached_pages,
+        """Legacy flat counter dict (perf reports, CI assertions) — now a
+        view over the metrics registry; ``metrics_snapshot()`` is the
+        full structured export."""
+        self.telemetry.registry.collect()
+        reg = self.telemetry.registry
+        out = {k: reg.counter(k).value for k in (
+            "preemptions", "cache_lookups", "cache_hits",
+            "cache_hit_tokens", "cache_hit_pages", "cow_copies",
+            "cache_evictions")}
+        out["cached_pages"] = self.scheduler.cached_pages
+        return out
+
+    def config_meta(self) -> dict:
+        """Engine-side facts for the metrics snapshot ``meta`` block (the
+        traceview attribution pass reconstructs cost models from these;
+        the driver adds what only it knows — w_bits, a_bits, dist)."""
+        ec, cfg = self.ec, self.cfg
+        meta = {
+            "arch": cfg.name, "family": cfg.family,
+            "cache_mode": ec.cache_mode, "kv_bits": ec.kv_bits,
+            "page_size": ec.page_size, "max_slots": ec.max_slots,
+            "max_len": ec.max_len, "prefill_batch": ec.prefill_batch,
+            "prefix_cache": ec.prefix_cache,
+            "prefill_chunk": ec.prefill_chunk,
+            "telemetry": ec.telemetry,
         }
+        if self.paged:
+            meta["page_bytes"] = self.page_bytes
+            meta["total_pages"] = self.scheduler.total_pages
+            meta["token_kv_bytes"] = self.page_bytes // ec.page_size
+        return meta
+
+    def metrics_snapshot(self, meta: Optional[dict] = None) -> dict:
+        """Stable JSON-serializable snapshot of every metric, gauges
+        refreshed; ``meta`` is merged over ``config_meta()``."""
+        m = self.config_meta()
+        m.update(meta or {})
+        return self.telemetry.snapshot(m)
+
+    def chrome_trace(self) -> dict:
+        """Chrome-trace/Perfetto JSON of the recorded spans."""
+        return self.telemetry.tracer.to_chrome_trace()
 
     @property
     def has_work(self) -> bool:
@@ -390,6 +527,11 @@ class Engine:
             for i in range(G, P):
                 toks[i], last[i], slots[i] = toks[0], last[0], slots[0]
 
+        tele = self.telemetry
+        if tele.enabled:
+            for ss in group:
+                tele.observe(self._m_queue_wait,
+                             now - (ss.request.arrival_time or now))
         first_tok, kv = self._prefill_step(self.params, jnp.asarray(toks),
                                            jnp.asarray(last),
                                            jnp.asarray(temps),
@@ -407,12 +549,18 @@ class Engine:
 
         finished: List[RequestOutput] = []
         t_first = time.perf_counter()
+        if tele.enabled:
+            tele.observe(self._m_prefill_call, t_first - now)
+            tele.tracer.add_span("prefill", now, t_first,
+                                 args={"batch": G, "bucket": bucket})
         for i, ss in enumerate(group):
             seq = ss.seq
             seq.admit_time = now
             if seq.first_token_time is None:
                 seq.first_token_time = t_first
                 self.n_prompt_tokens += int(seq.request.prompt.size)
+                tele.observe(self._m_ttft,
+                             t_first - (ss.request.arrival_time or t_first))
             seq.generated.append(int(first_np[i]))
             self._slots[ss.slot] = seq
             sp = ss.request.sampling
@@ -446,19 +594,25 @@ class Engine:
         dst = np.zeros((n,), np.int32)
         for i, (s, d) in enumerate(copies):
             src[i], dst[i] = s, d
-        self._cache = self._copy_pages(self._cache, jnp.asarray(src),
-                                       jnp.asarray(dst))
+        with self.telemetry.span("cow", n_copies=len(copies)):
+            self._cache = self._copy_pages(self._cache, jnp.asarray(src),
+                                           jnp.asarray(dst))
 
     def _advance_prefill(self, slot: int) -> List[RequestOutput]:
         """Run one prompt chunk for a mid-prefill sequence.  The final
         chunk samples the first token (folded at the prompt's last
         position, exactly like whole prefill) and activates the slot."""
+        tele = self.telemetry
+        t0 = tele.clock() if tele.enabled else 0.0
         seq = self._prefilling[slot]
         prompt = seq.full_prompt
         a = seq.prefill_progress
         b = min(a + self.chunk_tokens, prompt.size)
         # shared pages this chunk writes into must be copied first
-        for vslot, _vseq in self.scheduler.prepare_chunk_writes(slot, a, b):
+        for vslot, vseq in self.scheduler.prepare_chunk_writes(slot, a, b):
+            tele.instant("preempt", track="requests",
+                         tid=vseq.request.uid,
+                         args={"by": seq.request.uid, "cause": "cow"})
             self._clear_slot(vslot)
         self._apply_cow()
         C = self.chunk_tokens
@@ -484,6 +638,16 @@ class Engine:
             jnp.asarray([sp.seed], jnp.int32))
         self.n_prefill_calls += 1
         self.n_prefill_tokens += valid
+        if tele.enabled:
+            t1 = tele.clock()
+            tele.observe(self._m_chunk_call, t1 - t0)
+            tele.tracer.add_span("prefill_chunk", t0, t1,
+                                 args={"uid": seq.request.uid,
+                                       "tokens": valid})
+            if self._slots:
+                # decode was live while this chunk ran: interleaved
+                # prefill work, the decode-stall currency
+                self._m_tok_prefill_step.inc(valid)
         seq.prefill_progress = b
         if b < prompt.size:
             return []
@@ -495,6 +659,9 @@ class Engine:
         if seq.first_token_time is None:
             seq.first_token_time = time.perf_counter()
             self.n_prompt_tokens += int(seq.request.prompt.size)
+            tele.observe(self._m_ttft, seq.first_token_time
+                         - (seq.request.arrival_time
+                            or seq.first_token_time))
         seq.generated.append(first)
         self._slots[slot] = seq
         self._positions[slot] = prompt.size
@@ -510,6 +677,9 @@ class Engine:
     # -- decode ------------------------------------------------------------
 
     def _decode_active(self) -> List[RequestOutput]:
+        tele = self.telemetry
+        t0 = tele.clock() if tele.enabled else 0.0
+        n_active = len(self._slots)
         if self.paged:
             self._util_tokens += self.scheduler.tokens_in_use
             self._util_page_tokens += (self.scheduler.pages_in_use
@@ -534,7 +704,20 @@ class Engine:
                 jnp.asarray(self._positions), jnp.asarray(self._temps),
                 jnp.asarray(self._topks), jnp.asarray(self._seeds))
         self.n_decode_steps += 1
-        next_np = np.asarray(next_tok)
+        next_np = np.asarray(next_tok)       # host sync: the step is done
+        if tele.enabled:
+            t1 = tele.clock()
+            tele.observe(self._m_decode_step, t1 - t0)
+            tele.observe(self._m_batch, n_active)
+            self._m_tok_decode.inc(n_active)
+            if self._last_decode_end is not None:
+                # gap between consecutive sampled tokens — includes any
+                # scheduling/COW/chunked-prefill work between the steps,
+                # which is exactly what a waiting client experiences
+                tele.observe(self._m_itl, t1 - self._last_decode_end)
+            self._last_decode_end = t1
+            tele.tracer.add_span("decode", t0, t1,
+                                 args={"batch": n_active})
         finished: List[RequestOutput] = []
         for slot in list(self._slots):
             seq = self._slots[slot]
@@ -572,11 +755,39 @@ class Engine:
         self._clear_slot(slot)
         now = time.perf_counter()
         arrive = seq.request.arrival_time or seq.admit_time
+        tele = self.telemetry
+        if tele.enabled:
+            tele.observe(self._m_e2e, now - arrive)
+            tele.registry.counter(f"requests_finished_{reason}").inc()
+            self._emit_lifecycle(seq, arrive, now, reason)
         return RequestOutput(
             uid=seq.request.uid, prompt=seq.request.prompt,
             token_ids=list(seq.generated), finish_reason=reason,
             ttft_s=(seq.first_token_time or now) - arrive,
             latency_s=now - arrive, n_preempts=seq.n_preempts)
+
+    def _emit_lifecycle(self, seq: Sequence, arrive: float, finish: float,
+                        reason: str) -> None:
+        """Request-lifecycle spans on the ``requests`` track (tid = uid):
+        queued [arrival, admit], prefill [admit, first token], decode
+        [first token, finish].  Emitted whole at completion, so a ring
+        eviction can only drop a whole request's lane, never half of
+        one.  After preempt/resume, admit/first reflect the *last*
+        admission; the preempt ``instant`` markers in between tell the
+        story (args carry the round-trip count)."""
+        tr = self.telemetry.tracer
+        uid = seq.request.uid
+        admit = min(max(seq.admit_time or arrive, arrive), finish)
+        first = min(max(seq.first_token_time or finish, admit), finish)
+        tr.add_span("queued", arrive, admit, track="requests", tid=uid,
+                    args={"uid": uid})
+        tr.add_span("prefill", admit, first, track="requests", tid=uid,
+                    args={"prompt_tokens": int(seq.request.prompt.size),
+                          "cache_hit_tokens": seq.cache_hit_tokens})
+        tr.add_span("decode", first, finish, track="requests", tid=uid,
+                    args={"new_tokens": len(seq.generated),
+                          "n_preempts": seq.n_preempts,
+                          "finish_reason": reason})
 
     # -- main loop ---------------------------------------------------------
 
@@ -586,6 +797,8 @@ class Engine:
         later steps), advance one prompt chunk per mid-prefill slot,
         grow/preempt/copy pages for the coming decode writes (paged
         mode), then advance all active slots one decode step."""
+        tele = self.telemetry
+        t_step = tele.clock() if tele.enabled else 0.0
         finished: List[RequestOutput] = []
         while True:
             group = self.scheduler.schedule()
@@ -594,6 +807,8 @@ class Engine:
             if self.chunked:
                 now = time.perf_counter()
                 for ss in group:
+                    tele.observe(self._m_queue_wait,
+                                 now - (ss.request.arrival_time or now))
                     ss.seq.admit_time = now
                     ss.seq.prefill_progress = ss.seq.cache_hit_tokens
                     self._prefilling[ss.slot] = ss.seq
@@ -610,14 +825,27 @@ class Engine:
                 if slot in self._prefilling:  # not preempted by a peer
                     finished.extend(self._advance_prefill(slot))
         if self.paged and self._slots:
-            for slot, _seq in self.scheduler.ensure_decode_pages(
+            for slot, seq in self.scheduler.ensure_decode_pages(
                     writing=set(self._slots)):
                 # sequence went back to the waiting queue with its tokens;
                 # only the device-side slot state is dropped here
+                tele.instant("preempt", track="requests",
+                             tid=seq.request.uid,
+                             args={"cause": "pool_exhausted"})
                 self._clear_slot(slot)
             self._apply_cow()
         if self._slots:
             finished.extend(self._decode_active())
+        else:
+            # no decode ran: the next sampled token's gap is not an
+            # inter-token latency (the stream was idle or pure-prefill)
+            self._last_decode_end = None
+        if tele.enabled:
+            tele.tracer.add_span(
+                "step", t_step, tele.clock(),
+                args={"running": len(self._slots),
+                      "prefilling": len(self._prefilling),
+                      "waiting": self.scheduler.n_waiting})
         return finished
 
     def generate(self, requests: Seq[Request]) -> List[RequestOutput]:

@@ -103,6 +103,18 @@ class PrefixCache:
     def n_pages(self) -> int:
         return len(self._entries)
 
+    @property
+    def n_nodes(self) -> int:
+        """Radix-trie node count (index-size gauge for telemetry; the
+        page entries are the HBM cost, this is the host-side cost)."""
+        n = 0
+        stack = [self._root]
+        while stack:
+            node = stack.pop()
+            n += 1
+            stack.extend(node.children.values())
+        return n
+
     def pages(self) -> Iterator[int]:
         return iter(list(self._entries))
 

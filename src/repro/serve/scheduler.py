@@ -89,7 +89,11 @@ class Request:
     uid: int
     prompt: np.ndarray                    # (S0,) int32 token ids
     sampling: SamplingParams = SamplingParams()
-    arrival_time: float = 0.0
+    arrival_time: Optional[float] = None
+    # None = "not yet stamped" (the engine stamps perf_counter() at
+    # submit).  A driver that measured a real arrival sets it explicitly
+    # — including a legitimate 0.0, which the old sentinel encoding
+    # would have clobbered, skewing every TTFT measured from it.
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
@@ -308,6 +312,11 @@ class Scheduler:
     def tokens_in_use(self) -> int:
         """Valid KV rows held by running sequences (utilization numerator)."""
         return sum(s.next_write_pos for s in self._running.values())
+
+    @property
+    def n_free_pages(self) -> int:
+        """Pages on the free list right now (occupancy gauge)."""
+        return len(self._free_pages) if self.paged else 0
 
     @property
     def available_pages(self) -> int:

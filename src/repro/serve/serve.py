@@ -19,6 +19,7 @@ import jax.numpy as jnp
 from repro.configs.base import ArchConfig, ShapeConfig
 from repro.models import model
 from repro.models.lm import ModelOpts
+from repro.serve import telemetry as tele_lib
 
 
 @dataclasses.dataclass(frozen=True)
@@ -62,12 +63,17 @@ def sample(logits: jax.Array, rng, temperature: float) -> jax.Array:
 
 def generate(params, cfg: ArchConfig, opts: ModelOpts, sc: ServeConfig,
              prompt_tokens: jax.Array, n_new: int,
-             rng: Optional[jax.Array] = None):
+             rng: Optional[jax.Array] = None,
+             telemetry: Optional["tele_lib.Telemetry"] = None):
     """Greedy/temperature generation: prefill the prompt, then decode.
 
     prompt_tokens (B, S0) int32.  Returns (B, n_new) generated ids.
-    Decoder-only families; max_len = S0 + n_new cache.
+    Decoder-only families; max_len = S0 + n_new cache.  ``telemetry``
+    (serve/telemetry.py) records a "generate" span plus token counters;
+    the jitted step itself is untouched (host-side only, and the result
+    sync it needs for honest timing happens after the loop).
     """
+    tel = telemetry if telemetry is not None else tele_lib.NULL_TELEMETRY
     rng = rng if rng is not None else jax.random.PRNGKey(0)
     B, S0 = prompt_tokens.shape
     max_len = S0 + n_new
@@ -84,15 +90,22 @@ def generate(params, cfg: ArchConfig, opts: ModelOpts, sc: ServeConfig,
     tok = prompt_tokens[:, :1]
     out = []
     logits = None
-    for t in range(max_len - 1):
-        pos = jnp.full((B,), t, jnp.int32)
-        logits, cache = serve_step(params, cache, tok, pos)
-        if t + 1 < S0:
-            tok = prompt_tokens[:, t + 1:t + 2]
-        else:
-            rng, k = jax.random.split(rng)
-            tok = sample(logits, k, sc.temperature)[:, None]
-            out.append(tok[:, 0])
-        if len(out) >= n_new:
-            break
-    return jnp.stack(out, axis=1)
+    with tel.span("generate", batch=B, prompt_tokens=S0, n_new=n_new):
+        for t in range(max_len - 1):
+            pos = jnp.full((B,), t, jnp.int32)
+            logits, cache = serve_step(params, cache, tok, pos)
+            if t + 1 < S0:
+                tok = prompt_tokens[:, t + 1:t + 2]
+            else:
+                rng, k = jax.random.split(rng)
+                tok = sample(logits, k, sc.temperature)[:, None]
+                out.append(tok[:, 0])
+            if len(out) >= n_new:
+                break
+        result = jnp.stack(out, axis=1)
+        if tel.enabled:
+            # sync so the span covers real compute, not async dispatch
+            jax.block_until_ready(result)
+    tel.inc(tel.registry.counter("prompt_tokens"), B * S0)
+    tel.inc(tel.registry.counter("tokens_decoded"), B * len(out))
+    return result

@@ -136,6 +136,27 @@ class TestLintRules:
                "    return a\n")
         assert lint.lint_source(src, KPATH) == []
 
+    def test_uq108_wall_clock_in_traced_code_fires(self):
+        src = ("import time\n"
+               "def kern(a):\n"
+               "    t0 = time.perf_counter()\n"
+               "    b = a * 2\n"
+               "    return b, time.time() - t0\n")
+        fs = lint.lint_source(src, KPATH)
+        assert rules(fs) == ["UQ108", "UQ108"]
+        assert lint.lint_source(src, MPATH) != []      # models/ too
+
+    def test_uq108_silent_outside_traced_scope(self):
+        # host-side timing around the synced step is exactly where the
+        # clock belongs (serve/, launch/, benchmarks/)
+        src = ("import time\n"
+               "def step(eng):\n"
+               "    t0 = time.perf_counter()\n"
+               "    eng.step()\n"
+               "    return time.perf_counter() - t0\n")
+        assert lint.lint_source(src, SPATH) == []
+        assert lint.lint_source(src, "benchmarks/fake.py") == []
+
     def test_suppression_comment(self):
         src = ("import jax.numpy as jnp\n"
                "def f(x):\n"
