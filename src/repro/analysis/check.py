@@ -16,15 +16,20 @@ import json
 import sys
 from typing import List
 
-from repro.analysis import compile_audit, kernel_audit, lint
+from repro.analysis import benchcheck, compile_audit, kernel_audit, lint
 from repro.analysis.findings import (Finding, compare_baseline,
                                      findings_to_json, load_baseline)
 
-PASSES = ("lint", "kernel", "compile")
+PASSES = ("lint", "kernel", "compile", "bench", "mc")
+# mc exhausts a bounded state space (seconds, not ms) — opt in via
+# --mc or --only mc; everything else runs by default
+DEFAULT_PASSES = ("lint", "kernel", "compile", "bench")
 
 
 def run_passes(only: List[str], vmem_budget_mb: float,
-               kv_bits: List[int], with_engine: bool):
+               kv_bits: List[int], with_engine: bool,
+               mc_depth=None, mc_budget_s: float = 60.0,
+               mc_corpus_dir=None):
     findings: List[Finding] = []
     info = {}
     if "lint" in only:
@@ -39,6 +44,18 @@ def run_passes(only: List[str], vmem_budget_mb: float,
                                                 with_engine=with_engine)
         findings.extend(fs)
         info.update(i)
+    if "bench" in only:
+        fs, i = benchcheck.run_bench_check()
+        findings.extend(fs)
+        info.update(i)
+    if "mc" in only:
+        # imported here: the default passes stay importable without
+        # dragging the serving stack in
+        from repro.analysis import modelcheck
+        fs, stats = modelcheck.run_mc(depth=mc_depth, budget_s=mc_budget_s,
+                                      corpus_dir=mc_corpus_dir)
+        findings.extend(fs)
+        info["mc"] = stats
     return findings, info
 
 
@@ -49,8 +66,9 @@ def main(argv=None) -> int:
                    help="baseline JSON: only findings NOT in it fail")
     p.add_argument("--write-baseline", default=None, metavar="PATH",
                    help="write current findings as the new baseline")
-    p.add_argument("--only", default=",".join(PASSES),
-                   help=f"comma list of passes to run ({','.join(PASSES)})")
+    p.add_argument("--only", default=",".join(DEFAULT_PASSES),
+                   help=f"comma list of passes to run ({','.join(PASSES)}; "
+                        f"default {','.join(DEFAULT_PASSES)})")
     p.add_argument("--vmem-budget-mb", type=float,
                    default=kernel_audit.DEFAULT_VMEM_BUDGET_MB)
     p.add_argument("--kv-bits", default="16,8,4",
@@ -58,12 +76,23 @@ def main(argv=None) -> int:
     p.add_argument("--skip-engine", action="store_true",
                    help="skip the real-engine recompile-budget check "
                         "(static passes only; faster)")
+    p.add_argument("--mc", action="store_true",
+                   help="also run the bounded model-check pass "
+                        "(analysis/modelcheck.py, DESIGN.md Sec. 12)")
+    p.add_argument("--mc-depth", type=int, default=None,
+                   help="override every universe's DFS depth bound")
+    p.add_argument("--mc-budget-s", type=float, default=60.0,
+                   help="wall-clock budget shared by all mc universes")
+    p.add_argument("--mc-corpus-dir", default="tests/data/mc_corpus",
+                   help="where shrunk counterexample traces are written")
     p.add_argument("--assert-no-growth", action="store_true",
                    help="also fail if the finding count exceeds the "
                         "baseline count (baseline shrinks-or-holds)")
     args = p.parse_args(argv)
 
     only = [s.strip() for s in args.only.split(",") if s.strip()]
+    if args.mc and "mc" not in only:
+        only.append("mc")
     bad = [s for s in only if s not in PASSES]
     if bad:
         print(f"unknown pass(es): {bad}", file=sys.stderr)
@@ -71,7 +100,10 @@ def main(argv=None) -> int:
     kv_bits = [int(s) for s in args.kv_bits.split(",") if s.strip()]
 
     findings, info = run_passes(only, args.vmem_budget_mb, kv_bits,
-                                with_engine=not args.skip_engine)
+                                with_engine=not args.skip_engine,
+                                mc_depth=args.mc_depth,
+                                mc_budget_s=args.mc_budget_s,
+                                mc_corpus_dir=args.mc_corpus_dir)
 
     baseline = load_baseline(args.baseline) if args.baseline else None
     new, fixed = compare_baseline(findings, baseline)
@@ -105,6 +137,12 @@ def main(argv=None) -> int:
             mark = "NEW " if f in new else "     "
             loc = f"{f.path}:{f.line}" if f.line else f.path
             print(f"{mark}{f.rule:16s} {loc}\n      {f.message}")
+        for st in info.get("mc", []):
+            print(f"[uniqcheck] mc {st['universe']}: depth={st['depth']} "
+                  f"states={st['states']} transitions={st['transitions']} "
+                  f"invariant_checks={st['invariant_checks']} "
+                  f"exhausted={st['exhausted']} "
+                  f"({st['elapsed_s']:.1f}s)")
         print(f"[uniqcheck] passes={','.join(only)} findings="
               f"{len(findings)} new={len(new)} "
               f"fixed_vs_baseline={len(fixed)}")

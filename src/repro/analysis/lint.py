@@ -29,6 +29,13 @@ config away from shipping (see DESIGN.md Sec. 10 for the catalog):
          call fires once at trace time and the value is baked into the
          compiled graph; timing belongs in the host-side telemetry
          layer (serve/telemetry.py).
+  UQ109  ``assert`` as invariant enforcement — on a traced value in
+         kernels/models (the tracer is always truthy, and ``python -O``
+         strips the statement entirely), or anywhere in the scheduler /
+         prefix-cache hot paths (the paged-KV safety invariants the
+         model checker exhausts must survive ``-O``).  Route traced
+         checks through ``jax.experimental.checkify`` and host-side
+         invariants through ``Scheduler.check_invariants()``.
 
 Suppress a finding with ``# uniqcheck: ignore[UQ105]`` (or a bare
 ``# uniqcheck: ignore``) on the flagged line.  Finding identity is
@@ -53,6 +60,7 @@ RULES = {
     "UQ106": "jax import in a host-only module",
     "UQ107": "jit kernel param missing from static_argnames",
     "UQ108": "wall-clock read in traced code (time belongs in telemetry)",
+    "UQ109": "assert used for invariant enforcement (stripped under -O)",
 }
 
 # -- rule scopes (path prefixes are repo-relative, '/'-separated) ----------
@@ -343,12 +351,43 @@ def _check_wall_clock(tree, lines, relpath, findings):
                      "step (serve/telemetry.py) instead")
 
 
+# -- UQ109 ------------------------------------------------------------------
+
+# hot-path state machines whose invariants the model checker
+# (analysis/modelcheck.py) exhausts: enforcement must survive `python -O`
+ASSERT_HOT_PATHS = ("src/repro/serve/scheduler.py",
+                    "src/repro/serve/prefix_cache.py")
+
+
+def _check_assert_enforcement(tree, lines, relpath, findings):
+    hot = relpath in ASSERT_HOT_PATHS
+    traced = _in_scope(relpath, TRACED_SCOPE)
+    if not (hot or traced):
+        return
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Assert):
+            continue
+        if hot:
+            _finding(findings, lines, relpath, "UQ109", node,
+                     "`assert` enforces a scheduler/prefix-cache "
+                     "invariant but is stripped under `python -O` — "
+                     "raise, or route it through "
+                     "Scheduler.check_invariants() so the model "
+                     "checker and production both see it")
+        elif _is_traced_call(node.test):
+            _finding(findings, lines, relpath, "UQ109", node,
+                     "`assert` on a jnp/lax value: under jit the "
+                     "tracer is always truthy (the check never fires) "
+                     "and `python -O` strips it anyway — use "
+                     "jax.experimental.checkify for traced invariants")
+
+
 # -- driver -----------------------------------------------------------------
 
 _CHECKS_WITH_SOURCE = (_check_hot_jit_donate,)
 _CHECKS = (_check_traced_branch, _check_frozen_config, _check_dtype_less,
            _check_int4_mask, _check_host_purity, _check_static_hints,
-           _check_wall_clock)
+           _check_wall_clock, _check_assert_enforcement)
 
 
 def lint_source(source: str, relpath: str) -> List[Finding]:

@@ -127,6 +127,101 @@ class PrefixCache:
             if int(p) in self._entries:
                 self._last_used[int(p)] = self._clock
 
+    def lru_order(self) -> List[int]:
+        """Registered pages, least-recently-used first (ties broken by
+        registration order, matching ``evict_reclaimable``'s scan)."""
+        return sorted(self._entries,
+                      key=lambda p: self._last_used.get(p, 0))
+
+    # -- model-checker support (DESIGN.md Sec. 12) ---------------------------
+
+    def fingerprint(self, page_label=lambda p: p) -> Tuple:
+        """Canonical structural fingerprint of the index: the trie shape
+        with child keys sorted and page ids passed through ``page_label``
+        (the model checker supplies a relabeling so isomorphic states —
+        same structure, different physical page numbers — hash equal)."""
+
+        def walk(node: _Node) -> Tuple:
+            kids = tuple(
+                (key,
+                 -1 if node.children[key].page is None
+                 else page_label(node.children[key].page),
+                 walk(node.children[key]))
+                for key in sorted(node.children))
+            parts = tuple((key, page_label(node.partials[key].page))
+                          for key in sorted(node.partials))
+            return (kids, parts)
+
+        return walk(self._root)
+
+    def clone(self) -> "PrefixCache":
+        """Deep copy of the index (trie, entries, LRU state).  Token
+        arrays are shared — they are never mutated after registration."""
+        c = object.__new__(PrefixCache)
+        c.page_size = self.page_size
+        c._clock = self._clock
+        c.n_evictions = self.n_evictions
+        c._last_used = dict(self._last_used)
+        c._entries = {}
+
+        def walk(node: _Node, parent: Optional[_Node]) -> _Node:
+            n = _Node(parent=parent, key=node.key)
+            n.page = node.page
+            if n.page is not None:
+                c._entries[n.page] = ("node", n)
+            for key, part in node.partials.items():
+                p2 = _Partial(part.tokens, part.page)
+                n.partials[key] = p2
+                c._entries[p2.page] = ("partial", n, key)
+            for key, child in node.children.items():
+                n.children[key] = walk(child, n)
+            return n
+
+        c._root = walk(self._root, None)
+        # preserve page-entry insertion order: evict_reclaimable breaks
+        # LRU ties by dict order, so a clone must tie-break identically
+        c._entries = {p: c._entries[p] for p in self._entries}
+        return c
+
+    def check_consistency(self) -> None:
+        """Structural audit (model-checker exhaustive mode): the entry
+        map and the trie must describe each other exactly; parent/key
+        links must be intact; no dead (prunable) interior nodes linger."""
+        seen: Dict[int, Tuple] = {}
+        stack = [self._root]
+        while stack:
+            node = stack.pop()
+            if node.page is not None:
+                if node.page in seen:
+                    raise AssertionError(
+                        f"page {node.page} indexed twice")
+                seen[node.page] = ("node", node)
+            for key, part in node.partials.items():
+                if part.page in seen:
+                    raise AssertionError(
+                        f"page {part.page} indexed twice")
+                seen[part.page] = ("partial", node, key)
+            for key, child in node.children.items():
+                if child.parent is not node or child.key != key:
+                    raise AssertionError(
+                        f"broken parent/key link at {key!r}")
+                if (child is not self._root and child.page is None
+                        and not child.children and not child.partials):
+                    raise AssertionError("dead interior node not pruned")
+                stack.append(child)
+        if set(seen) != set(self._entries):
+            raise AssertionError(
+                f"entry map out of sync with trie: "
+                f"{sorted(set(seen) ^ set(self._entries))}")
+        for page, entry in self._entries.items():
+            if seen[page] != entry:
+                raise AssertionError(
+                    f"page {page}: entry map points at the wrong node")
+        extra = set(self._last_used) - set(self._entries)
+        if extra:
+            raise AssertionError(
+                f"LRU ticks for unregistered pages {sorted(extra)}")
+
     # -- lookup ------------------------------------------------------------
 
     def lookup(self, tokens: np.ndarray) -> Tuple[int, List[int]]:
@@ -173,7 +268,16 @@ class PrefixCache:
         """Index the pages holding ``tokens[:upto]``; returns the page ids
         newly taken into the cache (the caller owes each one reference).
         Existing entries win — a prefix already indexed is left pointing
-        at the original donor page."""
+        at the original donor page.
+
+        One entry per page: a page already indexed is never re-indexed
+        under a second key.  A sequence that attaches a partially-hit
+        cache page and releases *before writing into it* (preempted
+        mid-admission) re-registers that page under a shorter token run;
+        a second trie entry would double-count the cache's single
+        reference and corrupt the refcount ledger (found by uniqmc,
+        DESIGN.md Sec. 12 — an un-COWed tail page is the live donor
+        entry's page, so the shorter run is already served by it)."""
         tokens = np.asarray(tokens, np.int32).reshape(-1)
         ps = self.page_size
         if upto > tokens.size or upto < 0:
@@ -190,19 +294,28 @@ class PrefixCache:
                 child = _Node(parent=node, key=key)
                 node.children[key] = child
             if child.page is None:
-                child.page = int(pages[i])
-                self._entries[child.page] = ("node", child)
-                new.append(child.page)
+                page = int(pages[i])
+                if page in self._entries:
+                    # indexed elsewhere (e.g. as another run's partial
+                    # tail): stop so the registered prefix stays
+                    # contiguous and the page keeps its single entry
+                    self._prune(child)
+                    return new
+                child.page = page
+                self._entries[page] = ("node", child)
+                new.append(page)
             self._last_used[child.page] = self._clock
             node, n, i = child, n + ps, i + 1
         if upto - n > 0:
             key = chunk_key(tokens[n:upto])
-            if key not in node.partials:
+            if key not in node.partials \
+                    and int(pages[i]) not in self._entries:
                 part = _Partial(tokens[n:upto].copy(), int(pages[i]))
                 node.partials[key] = part
                 self._entries[part.page] = ("partial", node, key)
                 new.append(part.page)
-            self._last_used[node.partials[key].page] = self._clock
+            if key in node.partials:
+                self._last_used[node.partials[key].page] = self._clock
         return new
 
     # -- removal / eviction ------------------------------------------------

@@ -242,6 +242,11 @@ class Scheduler:
             # (src, dst) device copies owed before the next cache write;
             # the engine drains these via take_cow_copies()
             self._cow_pending: List[Tuple[int, int]] = []
+            # pages held by an *external* consumer (pool-pressure
+            # injection: tests, the model checker, a future co-resident
+            # replica).  Each holds one reference; check_invariants
+            # accounts for them like any other owner.
+            self._reserved_pages: List[int] = []
         else:
             self.capacity = max_len
 
@@ -622,6 +627,104 @@ class Scheduler:
         self.n_evicted += int(evicted)
         return seq
 
+    # -- deterministic action API (model checker / tests; DESIGN.md Sec. 12)
+
+    def preempt_slot(self, slot: int) -> Sequence:
+        """Force-preempt one running slot (pages freed, sequence requeued
+        at its FCFS position).  The engine only preempts under pool
+        pressure; exposing the transition directly lets the model checker
+        and tests explore preemption at *every* point, not just the ones
+        current pool geometry happens to trigger.  The caller owns any
+        engine-side slot state (``Engine._clear_slot``)."""
+        if slot not in self._running:
+            raise KeyError(f"slot {slot} is not running")
+        if not self.paged:
+            raise ValueError("preempt_slot requires paged KV (slot-mode "
+                             "eviction is terminal: use complete)")
+        return self._preempt(slot)
+
+    def reserve_pages(self, n: int = 1) -> List[int]:
+        """Take ``n`` pages out of circulation for an external consumer
+        (pool-pressure injection).  Goes through ``_take_page`` so LRU
+        cache reclaim applies, exactly like a real allocation.  All-or-
+        nothing: on exhaustion the partial grab is rolled back and
+        RuntimeError raised."""
+        if not self.paged:
+            raise ValueError("reserve_pages requires paged KV")
+        got: List[int] = []
+        for _ in range(n):
+            page = self._take_page()
+            if page is None:
+                for p in got:
+                    self._unref(p)
+                raise RuntimeError(
+                    f"reserve_pages({n}): page pool exhausted after "
+                    f"{len(got)}")
+            got.append(page)
+        self._reserved_pages.extend(got)
+        return got
+
+    def release_reserved(self, n: Optional[int] = None) -> int:
+        """Return externally reserved pages to the pool (LIFO); ``None``
+        releases all.  Returns the number released."""
+        if not self.paged:
+            return 0
+        take = len(self._reserved_pages) if n is None \
+            else min(n, len(self._reserved_pages))
+        for _ in range(take):
+            self._unref(self._reserved_pages.pop())
+        return take
+
+    def clone(self) -> "Scheduler":
+        """Deep, engine-independent copy of the full scheduler state.
+        The model checker forks the state per explored transition; tests
+        use it to diff before/after.  Subclasses (fault-injection
+        mutants) clone to their own type.  Request objects and prompt
+        arrays are shared (never mutated); everything mutable is copied."""
+        c = object.__new__(type(self))
+        c.max_slots = self.max_slots
+        c.prefill_batch = self.prefill_batch
+        c.min_bucket = self.min_bucket
+        c.max_len = self.max_len
+        c.paged = self.paged
+        c.capacity = self.capacity
+        c._order = self._order
+        for k in ("n_submitted", "n_completed", "n_evicted",
+                  "n_preemptions", "n_cache_lookups", "n_cache_hits",
+                  "n_cache_hit_tokens", "n_cache_hit_pages",
+                  "n_cow_copies", "n_cache_evictions"):
+            setattr(c, k, getattr(self, k))
+        clones: Dict[int, Sequence] = {}
+
+        def seq_clone(seq: Sequence) -> Sequence:
+            got = clones.get(id(seq))
+            if got is None:
+                got = dataclasses.replace(seq,
+                                          generated=list(seq.generated))
+                clones[id(seq)] = got
+            return got
+
+        c._waiting = deque(seq_clone(s) for s in self._waiting)
+        c._free = list(self._free)
+        c._running = {slot: seq_clone(s)
+                      for slot, s in self._running.items()}
+        c.prefix_cache = None
+        if self.paged:
+            c.page_size = self.page_size
+            c.page_bytes = self.page_bytes
+            c.pages_per_slot = self.pages_per_slot
+            c.total_pages = self.total_pages
+            c.usable_pages = self.usable_pages
+            c._free_pages = list(self._free_pages)
+            c._ref = self._ref.copy()
+            c.block_tables = self.block_tables.copy()
+            c._n_pages = self._n_pages.copy()
+            c._cow_pending = list(self._cow_pending)
+            c._reserved_pages = list(self._reserved_pages)
+            if self.prefix_cache is not None:
+                c.prefix_cache = self.prefix_cache.clone()
+        return c
+
     def flush_prefix_cache(self) -> int:
         """Unregister every cached page (e.g. after warmup, so benchmark
         hits are earned, not inherited). Pages still shared with running
@@ -637,11 +740,19 @@ class Scheduler:
 
     # -- invariants (property-test harness; cheap enough for debug use) ----
 
-    def check_invariants(self) -> None:
+    def check_invariants(self, exhaustive: bool = False) -> None:
         """Assert pool conservation: every usable page is either free or
         refcounted; refcounts equal block-table membership plus cache
-        registration; no aliased/dangling block-table entries; byte
-        accounting matches distinct pages in use."""
+        registration plus external reservations; no aliased/dangling
+        block-table entries; byte accounting matches distinct pages in
+        use.
+
+        ``exhaustive=True`` is the model-checker mode (DESIGN.md
+        Sec. 12): it additionally audits free-list order, pending-COW
+        pair sanity, reservation exclusivity and the prefix-cache
+        index's internal consistency — checks cheap at model-checking
+        scale (4-12 pages) that would be wasted work per engine step at
+        serving scale, where this method guards debug/property runs."""
         if not self.paged:
             return
         ref_expect = np.zeros((self.total_pages,), np.int64)
@@ -661,6 +772,8 @@ class Scheduler:
         if self.prefix_cache is not None:
             for p in self.prefix_cache.pages():
                 ref_expect[int(p)] += 1
+        for p in self._reserved_pages:
+            ref_expect[p] += 1
         if not (ref_expect == self._ref).all():
             bad = np.nonzero(ref_expect != self._ref)[0]
             raise AssertionError(
@@ -682,3 +795,34 @@ class Scheduler:
         for slot in self._free:
             if slot in self._running:
                 raise AssertionError(f"slot {slot} both free and running")
+        if not exhaustive:
+            return
+        if self._free_pages != sorted(self._free_pages):
+            raise AssertionError("free list out of order (lowest-first "
+                                 "allocation determinism broken)")
+        if len(set(self._reserved_pages)) != len(self._reserved_pages):
+            raise AssertionError("duplicate reserved pages")
+        held_anywhere = set()
+        for slot in self._running:
+            held_anywhere.update(
+                int(p) for p in
+                self.block_tables[slot, :int(self._n_pages[slot])])
+        for p in self._reserved_pages:
+            if int(self._ref[p]) != 1:
+                raise AssertionError(
+                    f"reserved page {p}: ref {int(self._ref[p])} != 1 "
+                    "(external reservations are exclusive)")
+            if p in held_anywhere or (self.prefix_cache is not None
+                                      and self.prefix_cache.owns(p)):
+                raise AssertionError(
+                    f"reserved page {p} also owned by a slot or the cache")
+        for src, dst in self._cow_pending:
+            if dst == 0 or src == dst:
+                raise AssertionError(
+                    f"pending COW ({src}, {dst}): bad pair")
+            if int(self._ref[dst]) != 1:
+                raise AssertionError(
+                    f"pending COW dst {dst}: ref {int(self._ref[dst])} "
+                    "!= 1 (dst must be freshly owned by the writer)")
+        if self.prefix_cache is not None:
+            self.prefix_cache.check_consistency()

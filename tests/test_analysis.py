@@ -157,6 +157,49 @@ class TestLintRules:
         assert lint.lint_source(src, SPATH) == []
         assert lint.lint_source(src, "benchmarks/fake.py") == []
 
+    def test_uq109_hot_path_assert_fires(self):
+        src = ("def _take_page(self):\n"
+               "    page = self._free_pages.pop()\n"
+               "    assert self._ref[page] == 0, 'allocating a live page'\n"
+               "    return page\n")
+        fs = lint.lint_source(src, "src/repro/serve/scheduler.py")
+        assert rules(fs) == ["UQ109"]
+        assert "check_invariants" in fs[0].message
+        # same statement in the prefix cache is equally load-bearing
+        assert rules(lint.lint_source(
+            src, "src/repro/serve/prefix_cache.py")) == ["UQ109"]
+
+    def test_uq109_traced_assert_fires(self):
+        src = ("import jax.numpy as jnp\n"
+               "def kern(x):\n"
+               "    assert jnp.all(x >= 0)\n"
+               "    return x * 2\n")
+        fs = lint.lint_source(src, KPATH)
+        assert rules(fs) == ["UQ109"]
+        assert "checkify" in fs[0].message
+
+    def test_uq109_silent_on_good_forms(self):
+        # hot path: explicit raise survives -O
+        good_hot = ("def _take_page(self):\n"
+                    "    page = self._free_pages.pop()\n"
+                    "    if self._ref[page] != 0:\n"
+                    "        raise RuntimeError('allocating a live page')\n"
+                    "    return page\n")
+        assert lint.lint_source(
+            good_hot, "src/repro/serve/scheduler.py") == []
+        # traced scope: host-value asserts are fine (shape plumbing),
+        # and checkify is the traced-value escape hatch
+        good_kern = ("import jax.numpy as jnp\n"
+                     "from jax.experimental import checkify\n"
+                     "def kern(x, bits):\n"
+                     "    assert bits in (4, 8), 'static host check'\n"
+                     "    checkify.check(jnp.all(x >= 0), 'neg input')\n"
+                     "    return x * 2\n")
+        assert lint.lint_source(good_kern, KPATH) == []
+        # other serve/ files keep their asserts (engine glue, tests)
+        bare = "def f(x):\n    assert x > 0\n    return x\n"
+        assert lint.lint_source(bare, SPATH) == []
+
     def test_suppression_comment(self):
         src = ("import jax.numpy as jnp\n"
                "def f(x):\n"

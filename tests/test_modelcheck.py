@@ -1,0 +1,202 @@
+"""uniqmc (analysis/modelcheck.py) — the model checker itself is under
+test.
+
+Three obligations, per DESIGN.md Sec. 12:
+
+  1. Teeth: each seeded fault-injection mutant (off-by-one refcount,
+     premature free, skipped COW, admission overcommit) is caught
+     inside the CI depth bound, and the delta-debugger shrinks the
+     counterexample to a 1-minimal trace of <= 10 actions.
+  2. Fidelity: every committed corpus trace round-trips — mutant
+     traces trip the *same* invariant key when replayed against the
+     live engine (not just the host-side World), and the regression
+     trace that found the prefix-cache re-register bug replays clean
+     on the fixed code.
+  3. Exhaustiveness: the healthy universes are fully explored (no
+     budget truncation, zero violations) with state counts large
+     enough to prove the enumerator is actually branching.
+"""
+
+import glob
+import os
+
+import pytest
+
+from repro.analysis import modelcheck as mc
+
+BY_NAME = {u.name: u for u in mc.UNIVERSES}
+CORPUS = os.path.join(os.path.dirname(__file__), "data", "mc_corpus")
+
+# mutant -> the invariant its fault must trip
+EXPECT_KEY = {
+    "leak_on_release": "refcount-mismatch",
+    "double_free_on_release": "refcount-mismatch",
+    "skip_cow": "write-exclusivity",
+    "admit_overcommit": "alloc-exhausted",
+}
+
+
+def corpus_docs():
+    docs = {}
+    for path in sorted(glob.glob(os.path.join(CORPUS, "*.json"))):
+        docs[os.path.basename(path)] = mc.load_trace(path)
+    return docs
+
+
+# -- 1. mutants: hunt, shrink, 1-minimality ---------------------------------
+
+class TestMutants:
+    @pytest.mark.parametrize("name", sorted(mc.MUTANTS))
+    def test_mutant_caught_and_shrinks_small(self, name):
+        res = mc.hunt_mutant(name)
+        assert res.trace is not None, f"{name}: not caught in depth bound"
+        assert res.violation_key == EXPECT_KEY[name]
+
+        factory = mc.mutant_factory(name)
+        _cls, u = mc.MUTANTS[name]
+        shrunk = mc.shrink_trace(u, res.trace, res.violation_key,
+                                 factory)
+        assert len(shrunk) <= 10
+        got = mc.replay_world(u, shrunk, factory)
+        assert got is not None and got[1].key == res.violation_key
+
+        # 1-minimal: dropping any single action loses the violation
+        for i in range(len(shrunk)):
+            cand = shrunk[:i] + shrunk[i + 1:]
+            got = mc.replay_world(u, cand, factory)
+            assert got is None or got[1].key != res.violation_key, \
+                f"{name}: action {i} of the shrunk trace is removable"
+
+    def test_healthy_scheduler_survives_mutant_universes(self):
+        """The mutant universes only trip because of the fault: the
+        unmutated scheduler exhausts them violation-free."""
+        for name in sorted(mc.MUTANTS):
+            _cls, u = mc.MUTANTS[name]
+            res = mc.explore(u)
+            assert res.exhausted and res.trace is None, \
+                f"{name}'s universe trips on the healthy scheduler"
+
+
+# -- 2. corpus round-trip ----------------------------------------------------
+
+class TestCorpus:
+    def test_corpus_is_complete(self):
+        docs = corpus_docs()
+        mutants_covered = {d["mutant"] for d in docs.values()
+                          if d["mutant"]}
+        assert mutants_covered == set(mc.MUTANTS)
+        assert any(d.get("expect_clean") for d in docs.values()), \
+            "regression trace for the fixed prefix-cache bug is missing"
+
+    @pytest.mark.parametrize("fname", sorted(
+        os.path.basename(p)
+        for p in glob.glob(os.path.join(CORPUS, "*.json"))))
+    def test_trace_replays_host_side(self, fname):
+        doc = mc.load_trace(os.path.join(CORPUS, fname))
+        u, actions = doc["universe"], doc["actions"]
+        assert len(actions) <= 10
+        if doc.get("expect_clean"):
+            # the trace that found the partial-tail re-register bug
+            # (PrefixCache.register one-entry-per-page): must now pass
+            assert mc.replay_world(u, actions) is None
+        else:
+            factory = mc.mutant_factory(doc["mutant"])
+            got = mc.replay_world(u, actions, factory)
+            assert got is not None and got[1].key == doc["invariant"]
+
+    def test_save_load_round_trip(self, tmp_path):
+        u = BY_NAME["u2p6"]
+        actions = [("submit", 0), ("schedule", None), ("chunk", 0)]
+        path = str(tmp_path / "t.json")
+        mc.save_trace(path, u, actions, "refcount-mismatch", "msg",
+                      mutant="leak_on_release", extra={"shrunk_from": 9})
+        doc = mc.load_trace(path)
+        assert doc["universe"] == u
+        assert doc["actions"] == actions
+        assert doc["invariant"] == "refcount-mismatch"
+        assert doc["mutant"] == "leak_on_release"
+        assert doc["shrunk_from"] == 9
+
+
+# -- 3. exhaustiveness -------------------------------------------------------
+
+class TestExhaustiveness:
+    def test_small_universes_exhaust_clean(self):
+        for name in ("u2p6b-kv8", "u3p8-kv4"):
+            res = mc.explore(BY_NAME[name])
+            assert res.exhausted and res.violation_key is None
+            assert res.states > 500, \
+                f"{name}: {res.states} states — enumerator not branching?"
+            assert res.invariant_checks >= res.transitions > res.states
+
+    @pytest.mark.slow
+    def test_flagship_universe_exhausts_at_depth_12(self):
+        """The acceptance-bar universe: 2 slots / depth 12, thousands
+        of canonical states, zero violations, no truncation."""
+        res = mc.explore(BY_NAME["u2p6"])
+        assert res.exhausted and res.violation_key is None
+        assert res.depth == 12 and res.states > 4000
+
+    def test_run_mc_budget_truncation_is_a_finding(self):
+        findings, stats = mc.run_mc(budget_s=0.0,
+                                    universes=(BY_NAME["u2p6"],))
+        assert [f.rule for f in findings] == ["MC-BUDGET"]
+        assert not stats[0]["exhausted"]
+
+    @pytest.mark.slow
+    def test_run_mc_full_pass_is_clean(self, tmp_path):
+        findings, stats = mc.run_mc(budget_s=120.0,
+                                    corpus_dir=str(tmp_path))
+        assert findings == []
+        assert all(st["exhausted"] for st in stats)
+        assert os.listdir(str(tmp_path)) == []   # no counterexamples
+
+
+# -- engine replay: bit-level fidelity --------------------------------------
+
+def drive_to_completion(u, n_requests, cap=64):
+    """Deterministic forward walk: always take the first enabled
+    action, which the enumerator orders submit < schedule < chunk <
+    decode — i.e. normal engine progress, no preempt/flush noise."""
+    w = mc.World(u)
+    actions = []
+    forward = ("submit", "schedule", "chunk", "decode")
+    while w.n_finished < n_requests and len(actions) < cap:
+        act = next(a for a in w.enabled_actions()
+                   if a[0] in forward
+                   and not (a[0] == "submit" and w.uid >= n_requests))
+        w.apply(act)
+        actions.append(act)
+    assert w.n_finished == n_requests
+    return actions
+
+
+class TestEngineReplay:
+    @pytest.mark.parametrize("name", sorted(mc.MUTANTS))
+    def test_mutant_trace_trips_live_engine(self, name):
+        """The shrunk counterexample is not an artifact of the host
+        World: the same actions against a real Engine (device pool,
+        COW kernel, token sampling) trip the same invariant."""
+        doc = mc.load_trace(os.path.join(CORPUS, f"{name}.json"))
+        rep = mc.replay_on_engine(doc["universe"], doc["actions"],
+                                  mutant=name)
+        assert rep.violation_key == doc["invariant"]
+        assert rep.n_skipped == 0
+
+    def test_regression_trace_clean_on_live_engine(self):
+        doc = mc.load_trace(
+            os.path.join(CORPUS, "regression-partial-reregister.json"))
+        rep = mc.replay_on_engine(doc["universe"], doc["actions"])
+        assert rep.violation_key is None
+        assert rep.n_skipped == 0
+
+    def test_healthy_replay_token_stream_bit_identity(self):
+        """Same action trace on two fresh engines: byte-identical
+        token streams (scheduling is deterministic, sampling is
+        seeded, the paged pool state cannot leak into tokens)."""
+        u = BY_NAME["u2p6"]
+        actions = drive_to_completion(u, n_requests=2)
+        a = mc.replay_on_engine(u, actions)
+        b = mc.replay_on_engine(u, actions)
+        assert a.violation_key is None and b.violation_key is None
+        assert a.streams and a.streams == b.streams
