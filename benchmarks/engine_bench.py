@@ -88,6 +88,25 @@ def _requests(vocab, n=N_REQUESTS, seed=0, shared_prefix=0, uid0=0,
             for i in range(n)]
 
 
+def _warm_prefill_buckets(eng, ec, reqs):
+    """Compile every power-of-two coalesced prefill_chunk group bucket
+    (chunk-on configs): equal-length prompts submitted together stay in
+    lockstep, so a wave of g requests exercises exactly the bucket-g
+    graph.  A fresh Engine otherwise compiles the G=2/G=4 graphs on
+    their first occurrence *inside* the timed region."""
+    if not ec.prefill_chunk:
+        return
+    prompts = [r.prompt for r in reqs]
+    g, cap = 2, min(ec.prefill_batch, ec.max_slots, len(prompts))
+    uid = -10
+    while g <= cap:
+        eng.generate([Request(uid=uid - j, prompt=prompts[j].copy(),
+                              sampling=SamplingParams(max_new_tokens=2))
+                      for j in range(g)])
+        uid -= g
+        g *= 2
+
+
 def _warm_cow(eng, vocab):
     """Compile the copy-on-write clone path (cache-on configs): register
     a prompt with a partial tail page, then hit it with a diverging
@@ -159,6 +178,12 @@ def bench_engine(params, cfg, opts, ec: EngineConfig, n_requests=N_REQUESTS,
     eng = Engine(params, cfg, opts, ec)
     # warm this instance's jit caches; warmup must not pre-seed the cache
     eng.generate(_requests(cfg.vocab, 2, seed=seed))
+    if ec.bucket_decode and ec.max_slots > 8:
+        # one full-occupancy wave: admission ramps the active count
+        # through every power-of-two decode bucket up to max_slots,
+        # compiling each bucketed decode graph outside the timed region
+        eng.generate(_requests(cfg.vocab, ec.max_slots, seed=seed,
+                               uid0=10_000))
     eng.flush_prefix_cache()
     eng.reset_stats()
     reqs = _requests(cfg.vocab, n_requests, seed=seed)
@@ -188,6 +213,7 @@ def bench_shared_prefix(params, cfg, opts, ec: EngineConfig, shared_prefix,
                      shared_prefix=shared_prefix, max_new=max_new)
     eng.generate([Request(uid=-1, prompt=reqs[0].prompt.copy(),
                           sampling=SamplingParams(max_new_tokens=2))])
+    _warm_prefill_buckets(eng, ec, reqs)
     _warm_cow(eng, cfg.vocab)
     if ec.prefix_cache:
         # re-prime from scratch so residency is exactly one completed
@@ -242,6 +268,13 @@ def bench_multiturn(params, cfg, opts, ec: EngineConfig, n_convs, n_turns,
                 0, cfg.vocab, warm_len).astype(np.int32),
                 sampling=SamplingParams(max_new_tokens=2))])
         warm_len += max_new + user_tokens
+    # dedicated rng: the measured ctx stream must not depend on whether
+    # the chunk-bucket warmup (cache-on configs only) consumed draws
+    wrng = np.random.default_rng(321)
+    _warm_prefill_buckets(eng, ec, [Request(
+        uid=-90 - i, prompt=wrng.integers(0, cfg.vocab,
+                                          first_prompt).astype(np.int32),
+        sampling=SamplingParams(max_new_tokens=2)) for i in range(n_convs)])
     _warm_cow(eng, cfg.vocab)
     eng.flush_prefix_cache()
     eng.reset_stats()
@@ -502,6 +535,11 @@ def main():
         print(f"{name},{us:.1f},{derived}")
         collect.setdefault("rows", []).append(
             {"name": name, "us_per_call": round(us, 1), "tok_s": derived})
+    # kernel microbench rides along so one refresh writes the full
+    # artifact (the bench uniqcheck pass gates the kernels section too)
+    from benchmarks import kernel_bench
+    for name, us, derived in kernel_bench.run(collect=collect):
+        print(f"{name},{us:.1f},{derived}")
     sweep = collect.get("kv_sweep", [])
     base = next((s for s in sweep if s["kv_bits"] == 16), None)
     if base:

@@ -1,46 +1,165 @@
-"""Micro-benchmarks of the quantization ops (reference path on CPU; on TPU
-the same harness times the Pallas kernels).  Derived column reports the
-modelled HBM-traffic ratio of W4 vs bf16 weights — the serving-side win."""
+"""Micro-benchmarks of the quantized serving kernels.
 
+Two sweeps (the uniqfast kernel-attack config axes):
+
+  * **qmatmul variant x schedule**: the dequant-fused matmul in every
+    serving variant — analytic Gaussian (W4/W8), codebook LUT (W4/W8,
+    ``dist="empirical"``) and W4A8 int8-activation — at the decode
+    (M=32) and prefill (M=256) call shapes, each under its tuned
+    block config (``kernels/qmatmul.TUNED_BLOCKS``), plus the fp32
+    dense baseline.
+  * **paged attention split-K**: the flash-decoding split axis of
+    ``kernels/paged_attn.paged_quant_attention`` (splits 1/2/4 over an
+    8-page table) at kv4 and kv8.
+
+On TPU the compiled Mosaic kernels run; on CPU the matmul rows time the
+pure-jnp reference path (what actually serves off-TPU) and the split-K
+rows run the kernel in Pallas interpret mode — schedule-shape coverage,
+not a perf claim; each row carries its ``mode`` so consumers can tell.
+
+Harness rows are ``(name, us_per_call, derived)`` with derived =
+effective GFLOP/s of the logical (un-quantized) op.  ``run(collect=)``
+fills a ``kernels`` section for BENCH_engine.json — run as a module,
+
+    PYTHONPATH=src python -m benchmarks.kernel_bench
+
+it merges that section into the committed artifact in place (the
+``bench`` uniqcheck pass gates its schema); benchmarks/engine_bench.py
+regenerates it as part of the full artifact refresh.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
 import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.core import activations as act
 from repro.kernels import ops
+from repro.kernels import paged_attn
+from repro.kernels.qmatmul import default_blocks
+
+JSON_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                         os.pardir, "BENCH_engine.json")
+
+K_DIM, N_DIM = 2048, 2048
+M_SHAPES = (("decode", 32), ("prefill", 256))
 
 
 def _time(fn, *args, iters=5):
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        jax.block_until_ready(fn(*args))
+    jax.block_until_ready(fn(*args))          # compile outside the clock
     t0 = time.perf_counter()
     for _ in range(iters):
         jax.block_until_ready(fn(*args))
     return (time.perf_counter() - t0) / iters * 1e6
 
 
-def run():
-    rows = []
-    M, K, N = 256, 2048, 2048
-    a = jax.random.normal(jax.random.PRNGKey(0), (M, K), jnp.float32) * 0.1
-    w = jax.random.normal(jax.random.PRNGKey(1), (K, N), jnp.float32) * 0.03
+def _emit(collect, name, us, flops, mode, **extra):
+    gflops = flops / max(us, 1e-9) / 1e3
+    if collect is not None:
+        collect.setdefault("kernels", []).append(
+            {"name": name, "us_per_call": round(us, 1),
+             "gflops": round(gflops, 2), "mode": mode, **extra})
+    return name, us, f"gflops={gflops:.2f}"
+
+
+def _bench_qmatmuls(collect):
+    on_tpu = jax.default_backend() == "tpu"
+    mode = "compiled" if on_tpu else "ref"
+    w = jax.random.normal(jax.random.PRNGKey(1), (K_DIM, N_DIM),
+                          jnp.float32) * 0.03
     mu = jnp.mean(w, axis=0, keepdims=True)
     sd = jnp.std(w, axis=0, keepdims=True)
 
-    f_ref = jax.jit(lambda a, w: a @ w)
-    us = _time(f_ref, a, w)
-    rows.append((f"qmatmul/fp32_{M}x{K}x{N}", us, "bytes_w=1.0x"))
+    for sched, M in M_SHAPES:
+        a = jax.random.normal(jax.random.PRNGKey(0), (M, K_DIM),
+                              jnp.float32) * 0.1
+        flops = 2.0 * M * K_DIM * N_DIM
 
-    for bits in [8, 4]:
-        wp = ops.quantize_weights(w[None], mu[None], sd[None], bits=bits,
-                                  use_pallas=False)
-        wp0 = wp[0]
-        f_q = jax.jit(lambda a, wp0: ops.qmatmul(a, wp0, mu, sd, bits=bits,
-                                                 use_pallas=False))
-        us = _time(f_q, a, wp0)
-        rows.append((f"qmatmul/w{bits}_{M}x{K}x{N}", us,
-                     f"bytes_w={bits / 32:.3f}x"))
+        f_ref = jax.jit(lambda a, w: jnp.dot(
+            a, w, preferred_element_type=jnp.float32))
+        us = _time(f_ref, a, w)
+        yield _emit(collect, f"qmatmul/fp32_{sched}_m{M}", us, flops, mode,
+                    variant="dense", bits=32, schedule=sched)
 
+        for bits in (8, 4):
+            k = 2 ** bits
+            blk = default_blocks(M)
+            wp = ops.quantize_weights(w[None], mu[None], sd[None], bits=bits,
+                                      use_pallas=False)[0]
+            f_q = jax.jit(lambda a, wp: ops.qmatmul(
+                a, wp, mu, sd, bits=bits,
+                bm=blk.bm, bk=blk.bk, bn=blk.bn))
+            us = _time(f_q, a, wp)
+            yield _emit(collect, f"qmatmul/w{bits}_{sched}_m{M}", us, flops,
+                        mode, variant="gaussian", bits=bits, schedule=sched,
+                        blocks=[blk.bm, blk.bk, blk.bn])
+
+            lut = jnp.broadcast_to(
+                jnp.sort(jax.random.normal(jax.random.PRNGKey(2), (k,)))[
+                    :, None], (k, N_DIM)).astype(jnp.float32)
+            lblk = default_blocks(M, "lut")
+            f_l = jax.jit(lambda a, wp: ops.qmatmul_lut(
+                a, wp, lut, bits=bits,
+                bm=lblk.bm, bk=lblk.bk, bn=lblk.bn))
+            us = _time(f_l, a, wp)
+            yield _emit(collect, f"qmatmul_lut/w{bits}_{sched}_m{M}", us,
+                        flops, mode, variant="lut", bits=bits, schedule=sched,
+                        blocks=[lblk.bm, lblk.bk, lblk.bn])
+
+        # W4A8: per-tensor int8 activation codes + scalar scale
+        blk = default_blocks(M)
+        codes, scale = act.quant_act(a, 8, act.act_scale(a, 8))
+        f_a8 = jax.jit(lambda c, s, wp: ops.qmatmul_a8(
+            c, s, wp, mu, sd, bits=4, bm=blk.bm, bk=blk.bk, bn=blk.bn))
+        wp4 = ops.quantize_weights(w[None], mu[None], sd[None], bits=4,
+                                   use_pallas=False)[0]
+        us = _time(f_a8, codes, scale, wp4)
+        yield _emit(collect, f"qmatmul_a8/w4a8_{sched}_m{M}", us, flops,
+                    mode, variant="a8", bits=4, schedule=sched,
+                    blocks=[blk.bm, blk.bk, blk.bn])
+
+
+def _bench_split_k(collect):
+    """Split-K axis of the paged-attention kernel (interpret off-TPU)."""
+    on_tpu = jax.default_backend() == "tpu"
+    mode = "compiled" if on_tpu else "interpret"
+    B, KV, G, D, page, n_pages = 4, 2, 2, 32, 8, 8
+    P = B * n_pages + 1
+    H = KV * G
+    rng = np.random.default_rng(3)
+    q = jnp.asarray(rng.normal(size=(B, 1, H, D)), jnp.float32)
+    tables = jnp.asarray(
+        1 + np.arange(B * n_pages).reshape(B, n_pages), jnp.int32)
+    q_pos = jnp.full((B,), n_pages * page - 1, jnp.int32)
+    for kv_bits in (8, 4):
+        dc = D // 2 if kv_bits == 4 else D
+        lo, hi, dt = (0, 256, jnp.uint8) if kv_bits == 4 \
+            else (-128, 128, jnp.int8)
+        kc, vc = (jnp.asarray(rng.integers(lo, hi, size=(P, page, KV, dc)),
+                              dt) for _ in range(2))
+        stats = [jnp.asarray(rng.normal(size=(P, page, KV)) * 0.1 + o,
+                             jnp.float32) for o in (0, 1, 0, 1)]
+        # logical tokens attended per call (the op the splits parallelize)
+        flops = 4.0 * B * H * D * n_pages * page
+        for splits in (1, 2, 4):
+            f = jax.jit(lambda q, kc, vc: paged_attn.paged_quant_attention(
+                q, kc, stats[0], stats[1], vc, stats[2], stats[3],
+                tables, q_pos, kv_bits=kv_bits, splits=splits,
+                interpret=not on_tpu))
+            us = _time(f, q, kc, vc, iters=3)
+            yield _emit(collect,
+                        f"paged_attn/kv{kv_bits}_splits{splits}", us, flops,
+                        mode, variant="paged_attn", bits=kv_bits,
+                        splits=splits, pages=n_pages)
+
+
+def _bench_uniq_noise(collect):
     G, R, C = 4, 1024, 2048
     wg = jax.random.normal(jax.random.PRNGKey(2), (G, R, C)) * 0.05
     mug = jnp.mean(wg, axis=(1, 2), keepdims=True)
@@ -50,6 +169,41 @@ def run():
     f_n = jax.jit(lambda w: ops.uniq_transform(w, mug, sdg, modes, key,
                                                k=16, use_pallas=False))
     us = _time(f_n, wg)
-    rows.append((f"uniq_noise/{G}x{R}x{C}_k16", us,
-                 f"gbps={wg.nbytes * 2 / us / 1e3:.2f}"))
-    return rows
+    name = f"uniq_noise/{G}x{R}x{C}_k16"
+    gbps = wg.nbytes * 2 / us / 1e3
+    if collect is not None:
+        collect.setdefault("kernels", []).append(
+            {"name": name, "us_per_call": round(us, 1),
+             "gflops": round(G * R * C / max(us, 1e-9) / 1e3, 2),
+             "mode": "ref", "variant": "uniq_noise"})
+    return name, us, f"gbps={gbps:.2f}"
+
+
+def run(collect=None):
+    yield from _bench_qmatmuls(collect)
+    yield from _bench_split_k(collect)
+    yield _bench_uniq_noise(collect)
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--json-out", default=JSON_PATH,
+                   help="BENCH_engine.json to merge the kernels section "
+                        "into (created if absent)")
+    args = p.parse_args()
+    collect = {}
+    print("name,us_per_call,derived")
+    for name, us, derived in run(collect=collect):
+        print(f"{name},{us:.1f},{derived}")
+    doc = {}
+    if os.path.exists(args.json_out):
+        with open(args.json_out) as fh:
+            doc = json.load(fh)
+    doc["kernels"] = collect["kernels"]
+    with open(args.json_out, "w") as fh:
+        json.dump(doc, fh, indent=2)
+    print(f"# wrote kernels section -> {os.path.abspath(args.json_out)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -21,6 +21,10 @@ DEFAULT_BENCH_PATH = "BENCH_engine.json"
 
 # every microbench row: identity + the two throughput numbers
 _ROW_FIELDS = ("name", "tok_s", "us_per_call")
+# every kernel-sweep row (benchmarks/kernel_bench.py): identity, the
+# timing pair, and the execution mode (compiled / ref / interpret) —
+# consumers must be able to tell a TPU number from a CPU shape check
+_KERNEL_FIELDS = ("name", "us_per_call", "gflops", "mode")
 # every latency-sweep row: the full percentile set (p50/p95/p99 each)
 _SWEEP_SECTIONS = ("shared_prefix_sweep", "multiturn_sweep", "kv_sweep")
 _SWEEP_FIELDS = tuple(
@@ -75,6 +79,24 @@ def run_bench_check(path: str = DEFAULT_BENCH_PATH) \
                 missing("rows", ident, field, "is missing")
             elif field != "name" and not _num(row[field]):
                 missing("rows", ident, field, "is not numeric")
+    kernels = doc.get("kernels")
+    if not isinstance(kernels, list) or not kernels:
+        findings.append(Finding(
+            rule="BENCH-SCHEMA", path=path, detail="kernels",
+            message="'kernels' section missing or empty (regenerate with "
+                    "benchmarks/kernel_bench.py)"))
+        kernels = []
+    for i, row in enumerate(kernels):
+        ident = str(row.get("name", i)) if isinstance(row, dict) else str(i)
+        if not isinstance(row, dict):
+            missing("kernels", ident, "-", "row is not an object")
+            continue
+        info["bench_kernel_rows"] = info.get("bench_kernel_rows", 0) + 1
+        for field in _KERNEL_FIELDS:
+            if field not in row:
+                missing("kernels", ident, field, "is missing")
+            elif field not in ("name", "mode") and not _num(row[field]):
+                missing("kernels", ident, field, "is not numeric")
     for section in _SWEEP_SECTIONS:
         sweep = doc.get(section)
         if sweep is None:

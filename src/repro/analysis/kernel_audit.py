@@ -274,6 +274,31 @@ def _case_qmatmul_prod():
     qm.qmatmul(a, w, mu, sg, bits=8)
 
 
+def _case_qmatmul_prod_decode():
+    """Decode-tuned blocks (32, 512, 512) at a serving W4 shape: the
+    batch-persistent schedule's VMEM working set is dominated by the
+    (bk, bn) dequant scratch — this case pins that estimate, and the
+    M-innermost grid still covers every (ksplit, M, N) output block."""
+    from repro.kernels import qmatmul as qm
+    M, K, N = 32, 2048, 2048
+    a = jnp.ones((M, K), jnp.float32)
+    w = jnp.zeros((K, N // 2), jnp.uint8)
+    mu = jnp.zeros((1, N), jnp.float32)
+    sg = jnp.ones((1, N), jnp.float32)
+    qm.qmatmul(a, w, mu, sg, bits=4)          # picks TUNED_BLOCKS["decode"]
+
+
+def _case_qmatmul_lut_prod():
+    """LUT-tuned blocks at a serving W4 shape: the f32 dequant scratch
+    plus the (k, bn) codebook block are the VMEM terms to pin."""
+    from repro.kernels import qmatmul as qm
+    M, K, N = 256, 1024, 512
+    a = jnp.ones((M, K), jnp.float32)
+    w = jnp.zeros((K, N // 2), jnp.uint8)
+    lut = jnp.zeros((16, N), jnp.float32)
+    qm.qmatmul_lut(a, w, lut, bits=4)         # picks TUNED_BLOCKS["lut"]
+
+
 def _case_qmatmul_lut(bits):
     from repro.kernels import qmatmul as qm
     M, K, N = 8, 8, 8
@@ -324,7 +349,7 @@ def _case_uniq_noise(onchip: bool):
 
 
 def _case_paged_attn(kv_bits, pages=5, page=4, KV=2, G=2, D=8, B=2,
-                     n_pages=2, bt=None):
+                     n_pages=2, bt=None, splits=None):
     from repro.kernels import paged_attn as pa
     H = KV * G
     Dc = D // 2 if kv_bits == 4 else D
@@ -338,7 +363,7 @@ def _case_paged_attn(kv_bits, pages=5, page=4, KV=2, G=2, D=8, B=2,
     bt = jnp.asarray(bt, jnp.int32)
     q_pos = jnp.asarray([page * n_pages - 1] * B, jnp.int32)
     pa.paged_quant_attention(q, kc, km, ks, kc, km, ks, bt, q_pos,
-                             kv_bits=kv_bits)
+                             kv_bits=kv_bits, splits=splits)
 
 
 def _case_paged_attn_prod():
@@ -346,11 +371,29 @@ def _case_paged_attn_prod():
     _case_paged_attn(8, pages=8, page=64, KV=4, G=2, D=128, B=2, n_pages=4)
 
 
+def _case_paged_attn_splitk(kv_bits):
+    """Split-K grid with a *non-divisible* page count: 4 splits over a
+    5-page table pads the block table to 8 logical pages with sink
+    entries — every (b, s, t) index-map evaluation, including the padded
+    tail, must stay inside the pool."""
+    _case_paged_attn(kv_bits, pages=12, page=4, KV=2, G=2, D=8, B=2,
+                     n_pages=5, splits=4)
+
+
+def _case_paged_attn_prod_splitk():
+    """Serving-scale split-K: the per-split (m, l, acc) partial outputs
+    and VMEM scratch at page 64 / hd 128 geometry."""
+    _case_paged_attn(8, pages=20, page=64, KV=4, G=2, D=128, B=2,
+                     n_pages=8, splits=4)
+
+
 KERNEL_CASES: Dict[str, Callable[[], None]] = {
     "qmatmul[w8]": functools.partial(_case_qmatmul, 8),
     "qmatmul[w4]": functools.partial(_case_qmatmul, 4),
     "qmatmul[prod_blocks]": _case_qmatmul_prod,
+    "qmatmul[prod_decode_blocks]": _case_qmatmul_prod_decode,
     "qmatmul_lut[w4]": functools.partial(_case_qmatmul_lut, 4),
+    "qmatmul_lut[prod_blocks]": _case_qmatmul_lut_prod,
     "qmatmul_a8[w8a8]": _case_qmatmul_a8,
     "kquantile[quantize]": functools.partial(_case_kquantile, "quantize"),
     "kquantile[dequantize]": functools.partial(_case_kquantile,
@@ -360,6 +403,9 @@ KERNEL_CASES: Dict[str, Callable[[], None]] = {
     "paged_attn[kv8]": functools.partial(_case_paged_attn, 8),
     "paged_attn[kv4]": functools.partial(_case_paged_attn, 4),
     "paged_attn[prod_geometry]": _case_paged_attn_prod,
+    "paged_attn[kv4_splitk]": functools.partial(_case_paged_attn_splitk, 4),
+    "paged_attn[kv8_splitk]": functools.partial(_case_paged_attn_splitk, 8),
+    "paged_attn[prod_splitk]": _case_paged_attn_prod_splitk,
 }
 
 

@@ -37,6 +37,12 @@ config away from shipping (see DESIGN.md Sec. 10 for the catalog):
          checks through ``jax.experimental.checkify`` and host-side
          invariants through ``Scheduler.check_invariants()``.
 
+  UQ110  MXU dot (``jnp.dot``/``lax.dot_general``/``jnp.matmul``) in
+         ``kernels/`` without ``preferred_element_type`` — Mosaic picks
+         the accumulator dtype from the operands, so bf16 tiles silently
+         accumulate in bf16 and long-K reductions lose mantissa bits;
+         every kernel dot must pin f32 accumulation explicitly.
+
 Suppress a finding with ``# uniqcheck: ignore[UQ105]`` (or a bare
 ``# uniqcheck: ignore``) on the flagged line.  Finding identity is
 ``rule:path:stripped-source-line`` — stable under unrelated edits.
@@ -61,6 +67,7 @@ RULES = {
     "UQ107": "jit kernel param missing from static_argnames",
     "UQ108": "wall-clock read in traced code (time belongs in telemetry)",
     "UQ109": "assert used for invariant enforcement (stripped under -O)",
+    "UQ110": "kernel dot without preferred_element_type (accum dtype drifts)",
 }
 
 # -- rule scopes (path prefixes are repo-relative, '/'-separated) ----------
@@ -91,7 +98,7 @@ FLOAT_CONSTRUCTORS = {"zeros": 1, "ones": 1, "empty": 1, "full": 2,
 # branches inside the wrapper
 STATIC_HINT_PARAMS = frozenset({
     "bits", "kv_bits", "k", "interpret", "out_dtype", "bm", "bk", "bn",
-    "block_r", "block_c", "page_size", "logit_cap",
+    "block_r", "block_c", "page_size", "logit_cap", "splits",
 })
 
 _SUPPRESS = re.compile(r"#\s*uniqcheck:\s*ignore(?:\[([A-Z0-9, ]+)\])?")
@@ -382,12 +389,41 @@ def _check_assert_enforcement(tree, lines, relpath, findings):
                      "jax.experimental.checkify for traced invariants")
 
 
+# -- UQ110 ------------------------------------------------------------------
+
+# dots that land on the MXU: without preferred_element_type the
+# accumulator dtype follows the operand dtype (bf16 in -> bf16 accum)
+MXU_DOT_CALLS = frozenset({
+    "jnp.dot", "jax.numpy.dot", "jnp.matmul", "jax.numpy.matmul",
+    "jax.lax.dot", "lax.dot", "jax.lax.dot_general", "lax.dot_general",
+})
+
+
+def _check_preferred_element_type(tree, lines, relpath, findings):
+    if not _in_scope(relpath, KERNEL_SCOPE):
+        return
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = _dotted(node.func)
+        if name not in MXU_DOT_CALLS:
+            continue
+        if any(kw.arg == "preferred_element_type" for kw in node.keywords):
+            continue
+        _finding(findings, lines, relpath, "UQ110", node,
+                 f"`{name}` without preferred_element_type: the MXU "
+                 "accumulator dtype follows the operands, so bf16 tiles "
+                 "accumulate in bf16 and long-K reductions lose mantissa "
+                 "— pin preferred_element_type=jnp.float32")
+
+
 # -- driver -----------------------------------------------------------------
 
 _CHECKS_WITH_SOURCE = (_check_hot_jit_donate,)
 _CHECKS = (_check_traced_branch, _check_frozen_config, _check_dtype_less,
            _check_int4_mask, _check_host_purity, _check_static_hints,
-           _check_wall_clock, _check_assert_enforcement)
+           _check_wall_clock, _check_assert_enforcement,
+           _check_preferred_element_type)
 
 
 def lint_source(source: str, relpath: str) -> List[Finding]:

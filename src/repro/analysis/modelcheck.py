@@ -861,9 +861,9 @@ def replay_on_engine(u: Universe, actions: List[Action],
                 eng._clear_slot(vslot)
             _check_cow_pairs(s._cow_pending)
             _assert_exclusive_range(s, arg, a, b)
-            # _advance_prefill re-runs prepare (a no-op now), drains the
-            # COW batch onto the device, runs the chunk, maybe activates
-            finish(eng._advance_prefill(arg))
+            # _advance_prefill_group re-runs prepare (a no-op now), drains
+            # the COW batch onto the device, runs the chunk, maybe activates
+            finish(eng._advance_prefill_group([arg]))
         elif op == "decode":
             for vslot, _v in s.ensure_decode_pages(writing=set(eng._slots)):
                 eng._clear_slot(vslot)

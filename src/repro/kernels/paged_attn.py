@@ -4,18 +4,34 @@ The serving-side counterpart of the qmatmul kernel (DESIGN.md Sec. 2): at
 decode time the KV pool — not the weights — is the HBM roofline term, and
 with k-quantile-coded pages (models/kv_cache.py) the pool bytes drop ~2x
 (kv8) / ~3.6x (kv4).  This kernel keeps the win by never materializing a
-dense pool: per (batch, page) grid step the *scalar-prefetched* block
-table drives the BlockSpec index map, so only the pages a sequence
-actually owns are DMA'd HBM->VMEM, as packed codes; unpack (mask/shift
-for int4) and the analytic dequant
+dense pool: per grid step the *scalar-prefetched* block table drives the
+BlockSpec index map, so only the pages a sequence actually owns are DMA'd
+HBM->VMEM, as packed codes; unpack (mask/shift for int4) and the analytic
+dequant
 
     x = mu_rh + sigma_rh * Phi^{-1}((c + 1/2) / k)        (erf_inv)
 
-run on the VPU against the page tile, and an online softmax accumulates
-across the page grid dimension in VMEM scratch — the flash-decoding
-structure of ``chunked_attention`` with the dequant fused into the KV
-load.  Per-(row, head) statistics ride in the same page geometry as the
-codes, so one index map serves all six operands.
+run on the VPU against the page tile — the int4 nibble unpack for both K
+and V pages is issued *before* either MXU dot, so the VPU unpack of the
+next operand overlaps the MXU's current dot — and an online softmax
+accumulates across the page axis in VMEM scratch.  Per-(row, head)
+statistics ride in the same page geometry as the codes, so one index map
+serves all six operands.
+
+Split-K schedule (the uniqfast restructure): each sequence's pages are
+partitioned across a *parallel* ``splits`` grid axis — grid
+``(B, splits, pages_per_split)`` — so long-context decode no longer
+serializes over the whole page list.  Each split runs the same online
+softmax over its page range and emits flash-decoding partials
+``(m, l, acc)`` per (batch, split); a cheap jnp combine epilogue rescales
+by ``alpha_s = exp(m_s - max_s m_s)`` and merges:
+
+    l = sum_s alpha_s l_s,   acc = sum_s alpha_s acc_s,   out = acc / l.
+
+Splits that see only masked rows carry ``m = -inf, l = 0`` and combine to
+exact zeros.  ``splits`` is a tuned static axis (default: 1 below 8
+pages, else 4); the block table is sink-padded to ``splits *
+pages_per_split`` and padded entries are masked by the causal bound.
 
 Interpret mode executes the same body on CPU (tier-1 parity tests vs the
 jnp reference in ``models/attention.py``); compiled Mosaic needs TPU-
@@ -27,6 +43,7 @@ interpreted.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -38,6 +55,18 @@ from repro.kernels import pallas_compat as pc
 _SQRT2 = 1.4142135623730951
 _EPS = 1e-6
 NEG_INF = -1e30
+
+# below this many pages a single split saturates the page axis; above,
+# flash-decoding's canonical 4-way split covers serving contexts
+_SPLIT_MIN_PAGES = 8
+DEFAULT_SPLITS = 4
+
+
+def default_splits(n_pages: int) -> int:
+    """Tuned split count for a table width (the split-K config axis)."""
+    if n_pages < _SPLIT_MIN_PAGES:
+        return 1
+    return min(DEFAULT_SPLITS, n_pages)
 
 
 def _dequant_page(codes, mu, sigma, bits: int, k: int):
@@ -58,13 +87,14 @@ def _dequant_page(codes, mu, sigma, bits: int, k: int):
 
 
 def _kernel(bt_ref, qpos_ref, win_ref, q_ref, kc_ref, km_ref, ks_ref,
-            vc_ref, vm_ref, vs_ref, o_ref, m_scr, l_scr, acc_scr, *,
-            bits: int, k: int, page: int, logit_cap):
+            vc_ref, vm_ref, vs_ref, m_out, l_out, acc_out, m_scr, l_scr,
+            acc_scr, *, bits: int, k: int, page: int, pages_per_split: int,
+            logit_cap):
     b = pl.program_id(0)
-    j = pl.program_id(1)
-    n_pages = pl.num_programs(1)
+    s = pl.program_id(1)
+    t = pl.program_id(2)
 
-    @pl.when(j == 0)
+    @pl.when(t == 0)
     def _init():
         m_scr[...] = jnp.full_like(m_scr, NEG_INF)
         l_scr[...] = jnp.zeros_like(l_scr)
@@ -72,26 +102,29 @@ def _kernel(bt_ref, qpos_ref, win_ref, q_ref, kc_ref, km_ref, ks_ref,
 
     q = q_ref[0].astype(jnp.float32)                       # (KV, G, D)
     D = q.shape[-1]
+    # unpack+dequant BOTH pages up front: the VPU nibble unpack of V
+    # overlaps the MXU's score dot instead of stalling behind it
     kd = _dequant_page(kc_ref[0], km_ref[0], ks_ref[0], bits, k)
     vd = _dequant_page(vc_ref[0], vm_ref[0], vs_ref[0], bits, k)
 
     # scores: (KV, G, D) x (KV, D, page) -> (KV, G, page)
-    s = jax.lax.dot_general(
+    sc = jax.lax.dot_general(
         q * (D ** -0.5), jnp.transpose(kd, (1, 2, 0)),
         dimension_numbers=(((2,), (1,)), ((0,), (0,))),
         preferred_element_type=jnp.float32)
     if logit_cap is not None:
-        s = logit_cap * jnp.tanh(s / logit_cap)
+        sc = logit_cap * jnp.tanh(sc / logit_cap)
+    j = s * pages_per_split + t                            # logical page
     rows = j * page + jax.lax.broadcasted_iota(jnp.int32, (1, 1, page), 2)
     valid = rows <= qpos_ref[b]
     # sliding window (traced per-layer scalar; BIG_WINDOW sentinel = global)
     valid &= (qpos_ref[b] - rows) < win_ref[0]
-    s = jnp.where(valid, s, NEG_INF)
+    sc = jnp.where(valid, sc, NEG_INF)
 
     m_prev = m_scr[...]
-    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    m_new = jnp.maximum(m_prev, jnp.max(sc, axis=-1))
     alpha = jnp.exp(m_prev - m_new)                        # <= 1, finite
-    pexp = jnp.where(valid, jnp.exp(s - m_new[..., None]), 0.0)
+    pexp = jnp.where(valid, jnp.exp(sc - m_new[..., None]), 0.0)
     l_scr[...] = l_scr[...] * alpha + jnp.sum(pexp, axis=-1)
     # (KV, G, page) x (KV, page, D) -> (KV, G, D)
     acc_scr[...] = acc_scr[...] * alpha[..., None] + jax.lax.dot_general(
@@ -100,22 +133,24 @@ def _kernel(bt_ref, qpos_ref, win_ref, q_ref, kc_ref, km_ref, ks_ref,
         preferred_element_type=jnp.float32)
     m_scr[...] = m_new
 
-    @pl.when(j == n_pages - 1)
-    def _fin():
-        out = acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)[..., None]
-        o_ref[0] = out.astype(o_ref.dtype)
+    @pl.when(t == pages_per_split - 1)
+    def _emit():                 # per-split flash-decoding partials
+        m_out[0, 0] = m_scr[...]
+        l_out[0, 0] = l_scr[...]
+        acc_out[0, 0] = acc_scr[...]
 
 
 BIG_WINDOW = 1 << 30
 
 
 @functools.partial(jax.jit, static_argnames=("kv_bits", "logit_cap",
-                                             "interpret"))
+                                             "splits", "interpret"))
 def paged_quant_attention(q: jax.Array, k_codes: jax.Array, k_mu: jax.Array,
                           k_sigma: jax.Array, v_codes: jax.Array,
                           v_mu: jax.Array, v_sigma: jax.Array,
                           block_tables: jax.Array, q_pos: jax.Array, *,
                           kv_bits: int, window=None, logit_cap=None,
+                          splits: Optional[int] = None,
                           interpret: bool = False) -> jax.Array:
     """q (B, 1, H, D) vs coded pool pages -> (B, 1, H, D).
 
@@ -126,32 +161,49 @@ def paged_quant_attention(q: jax.Array, k_codes: jax.Array, k_mu: jax.Array,
     ``window``: causal sliding-window width — a *traced* scalar (the
     decode scan's per-layer window, BIG_WINDOW sentinel for global), so
     local and global layers share one compiled kernel.
+    ``splits``: split-K parallelism over the page axis; None picks the
+    tuned default for the table width.
     """
     B, _, H, D = q.shape
     P, page, KV = k_mu.shape
     G = H // KV
     n_pages = block_tables.shape[1]
+    if splits is None:
+        splits = default_splits(n_pages)
+    splits = max(1, min(splits, n_pages))
+    pages_per_split = -(-n_pages // splits)
     k = 2 ** kv_bits
     qg = q.reshape(B, KV, G, D)
     block_tables = jnp.asarray(block_tables, jnp.int32)
+    pad = splits * pages_per_split - n_pages
+    if pad:
+        # sink-pad the table: padded logical pages sit past every q_pos
+        # (q_pos < n_pages * page), so the causal bound masks them out
+        block_tables = jnp.pad(block_tables, ((0, 0), (0, pad)))
     q_pos = jnp.asarray(q_pos, jnp.int32)
     if window is None:
         window = BIG_WINDOW
     window = jnp.asarray(window, jnp.int32).reshape((1,))
     Dc = k_codes.shape[-1]
 
-    def page_map(b, j, bt, qp, win):
-        return (bt[b, j], 0, 0, 0)
+    def page_map(b, s, t, bt, qp, win):
+        return (bt[b, s * pages_per_split + t], 0, 0, 0)
 
-    def stat_map(b, j, bt, qp, win):
-        return (bt[b, j], 0, 0)
+    def stat_map(b, s, t, bt, qp, win):
+        return (bt[b, s * pages_per_split + t], 0, 0)
 
-    def q_map(b, j, bt, qp, win):
+    def q_map(b, s, t, bt, qp, win):
         return (b, 0, 0, 0)
+
+    def part_map(b, s, t, bt, qp, win):
+        return (b, s, 0, 0)
+
+    def acc_map(b, s, t, bt, qp, win):
+        return (b, s, 0, 0, 0)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
-        grid=(B, n_pages),
+        grid=(B, splits, pages_per_split),
         in_specs=[
             pl.BlockSpec((1, KV, G, D), q_map),
             pl.BlockSpec((1, page, KV, Dc), page_map),
@@ -161,22 +213,38 @@ def paged_quant_attention(q: jax.Array, k_codes: jax.Array, k_mu: jax.Array,
             pl.BlockSpec((1, page, KV), stat_map),
             pl.BlockSpec((1, page, KV), stat_map),
         ],
-        out_specs=pl.BlockSpec((1, KV, G, D), q_map),
+        out_specs=[
+            pl.BlockSpec((1, 1, KV, G), part_map),
+            pl.BlockSpec((1, 1, KV, G), part_map),
+            pl.BlockSpec((1, 1, KV, G, D), acc_map),
+        ],
         scratch_shapes=[
             pltpu.VMEM((KV, G), jnp.float32),
             pltpu.VMEM((KV, G), jnp.float32),
             pltpu.VMEM((KV, G, D), jnp.float32),
         ],
     )
-    out = pl.pallas_call(
+    m_part, l_part, acc_part = pl.pallas_call(
         functools.partial(_kernel, bits=kv_bits, k=k, page=page,
+                          pages_per_split=pages_per_split,
                           logit_cap=logit_cap),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((B, KV, G, D), q.dtype),
+        out_shape=[
+            jax.ShapeDtypeStruct((B, splits, KV, G), jnp.float32),
+            jax.ShapeDtypeStruct((B, splits, KV, G), jnp.float32),
+            jax.ShapeDtypeStruct((B, splits, KV, G, D), jnp.float32),
+        ],
         compiler_params=pc.compiler_params(
-            dimension_semantics=("parallel", "arbitrary"),
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=pc.interpret_mode(interpret),
     )(block_tables, q_pos, window, qg, k_codes, k_mu, k_sigma, v_codes,
       v_mu, v_sigma)
-    return out.reshape(B, 1, H, D)
+
+    # combine epilogue: rescale each split's partials to the global max
+    m_max = jnp.max(m_part, axis=1, keepdims=True)
+    alpha = jnp.exp(m_part - m_max)                        # 0 for dry splits
+    l = jnp.sum(alpha * l_part, axis=1)
+    acc = jnp.sum(alpha[..., None] * acc_part, axis=1)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(q.dtype).reshape(B, 1, H, D)

@@ -93,6 +93,7 @@ def run_engine_stream(params, cfg, opts, args) -> dict:
                       prefill_batch=args.prefill_batch,
                       cache_mode=args.cache_mode, page_size=args.page_size,
                       total_pages=args.total_pages, kv_bits=args.kv_bits,
+                      a_bits=args.a_bits,
                       pool_bytes=args.pool_bytes,
                       prefix_cache=args.prefix_cache,
                       prefill_chunk=args.prefill_chunk,
@@ -283,7 +284,12 @@ def main(argv=None):
                    help="weight dequant levels: analytic Gaussian or the "
                         "empirical per-tensor codebook (LUT) — match the "
                         "checkpoint's training cfg.dist")
-    p.add_argument("--a-bits", type=int, default=32)
+    p.add_argument("--a-bits", type=int, default=32,
+                   help="activation bit-width: closed-batch mode applies "
+                        "layer-output fake-quant; --engine mode serves a "
+                        "real per-token int8 codec on every quantized "
+                        "matmul (prefill + decode) and reports it in the "
+                        "metrics meta for BOPs attribution")
     p.add_argument("--batch", type=int, default=4)
     p.add_argument("--prompt-len", type=int, default=16)
     p.add_argument("--new-tokens", type=int, default=32)
@@ -371,7 +377,11 @@ def main(argv=None):
     params = model.init(jax.random.PRNGKey(args.seed), cfg)
 
     if args.engine:
-        sc = serve_lib.ServeConfig(w_bits=args.w_bits, a_bits=args.a_bits,
+        # engine mode routes --a-bits through EngineConfig to the real
+        # per-token int8 codec (lm.mm_a), not the closed-batch
+        # layer-output fake-quant — keep ServeConfig at a_bits=32 so
+        # make_serve_opts doesn't double-apply activation quantization
+        sc = serve_lib.ServeConfig(w_bits=args.w_bits, a_bits=32,
                                    w_dist=args.w_dist)
         params = serve_lib.prepare_params(params, sc)
         opts = serve_lib.make_serve_opts(opts, sc)

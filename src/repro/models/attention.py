@@ -39,12 +39,19 @@ class AttnParams(NamedTuple):
 
 
 def _mask(q_pos: Array, k_pos: Array, p: AttnParams) -> Array:
-    """(..., Sq, Sk) boolean validity mask from position vectors."""
-    m = jnp.ones((q_pos.shape[-1], k_pos.shape[-1]), jnp.bool_)
+    """(..., Sq, Sk) boolean validity mask from position vectors.
+
+    ``q_pos`` may be (Sq,) — shared positions for every batch row — or
+    (B, Sq) per-sequence positions (the batched chunked-prefill path,
+    where each row of a coalesced chunk sits at a different prompt
+    offset); ``k_pos`` is (Sk,).
+    """
+    qp = q_pos[..., :, None]
+    m = jnp.ones(qp.shape[:-1] + (k_pos.shape[-1],), jnp.bool_)
     if p.causal:
-        m &= q_pos[:, None] >= k_pos[None, :]
+        m &= qp >= k_pos
     if p.window is not None:
-        m &= q_pos[:, None] - k_pos[None, :] < p.window
+        m &= qp - k_pos < p.window
     return m
 
 
@@ -61,19 +68,28 @@ def _scores(q: Array, k: Array, p: AttnParams) -> Array:
     return s.reshape(B, H, Sq, k.shape[1])
 
 
-def full_attention(q: Array, k: Array, v: Array, q_pos: Array, k_pos: Array,
-                   p: AttnParams) -> Array:
-    """Materialized-scores attention.  positions: (Sq,), (Sk,) int32."""
+def _attend(q: Array, k: Array, v: Array, mask: Array,
+            p: AttnParams) -> Array:
+    """Materialized-scores attention under a precomputed validity mask of
+    shape (Sq, Sk) (shared) or (B, Sq, Sk) (per-sequence positions)."""
     B, Sq, H, D = q.shape
     KV = k.shape[2]
     G = H // KV
     s = _scores(q, k, p)                                  # (B,H,Sq,Sk) f32
-    mask = _mask(q_pos, k_pos, p)
-    s = jnp.where(mask[None, None], s, NEG_INF)
+    if mask.ndim == 2:
+        mask = mask[None]
+    s = jnp.where(mask[:, None], s, NEG_INF)
     a = jax.nn.softmax(s, axis=-1).astype(v.dtype)
     a = a.reshape(B, KV, G, Sq, k.shape[1])
     out = jnp.einsum("bkgqs,bskd->bqkgd", a, v)
     return out.reshape(B, Sq, H, D)
+
+
+def full_attention(q: Array, k: Array, v: Array, q_pos: Array, k_pos: Array,
+                   p: AttnParams) -> Array:
+    """Materialized-scores attention.  positions: (Sq,) (or (B, Sq) for
+    per-sequence chunk offsets), (Sk,) int32."""
+    return _attend(q, k, v, _mask(q_pos, k_pos, p), p)
 
 
 def chunked_attention(q: Array, k: Array, v: Array, q_pos: Array,
@@ -213,7 +229,9 @@ def paged_prefill_attention(q: Array, k_pages: Array, v_pages: Array,
     k/v_pages    : (P, page, KV, D) page pool; the chunk's own rows must
                    already be scattered in (write-before-read).
     block_tables : (B, n_pages) page ids; sink entries masked by position.
-    q_pos        : (C,) absolute positions of the chunk's tokens.
+    q_pos        : (C,) absolute positions of the chunk's tokens, or
+                   (B, C) per-sequence positions when several coalesced
+                   sequences' chunks sit at different prompt offsets.
 
     The gathered view is position-contiguous (page j of the table covers
     positions [j*page, (j+1)*page)), so ``full_attention``'s causal
@@ -238,6 +256,7 @@ def paged_prefill_attention_quant(q: Array, cache, block_tables: Array,
                                   kv_bits: int) -> Array:
     """Chunked-prefill attention against a k-quantile-coded paged pool.
 
+    ``q_pos`` is (C,) or (B, C) exactly as in ``paged_prefill_attention``.
     Gathers + dequantizes the block-table row densely and defers to
     ``full_attention`` — exactly what the whole-prefill path sees after
     ``fake_quant_kv``, so chunked and whole prefill agree in the codes

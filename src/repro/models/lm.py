@@ -50,6 +50,11 @@ class ModelOpts:
     fsdp_axes: tuple = ("data",)      # axes expert weights are FSDP-sharded on
     manual_axes: tuple = ()           # mesh axes already manual (shard_map)
     serve_w_bits: int = 16            # 4/8 => quantized serving weights
+    serve_a_bits: int = 32            # serving activation codec on quantized
+                                      #   matmuls: 8 => per-token int8 codes
+                                      #   + absmax scale before the dot (the
+                                      #   qmatmul_a8 regime; threaded from
+                                      #   EngineConfig.a_bits / --a-bits)
     kv_bits: int = 16                 # 8/4 => k-quantile-coded KV cache
                                       #   (paged serving; per-row per-head
                                       #   stats, see models/kv_cache.py)
@@ -143,6 +148,27 @@ def materialize(w, dtype):
 def mm(x: Array, w) -> Array:
     """x @ w where w is a dense array or a quantized-weight dict."""
     return jnp.dot(x, materialize(w, x.dtype))
+
+
+def mm_a(x: Array, w, opts: "ModelOpts") -> Array:
+    """``mm`` with the serving activation codec (the A8 path).
+
+    With ``opts.serve_a_bits < 32`` and a quantized weight dict, the
+    activation is round-tripped through the real integer codec per token
+    (absmax scale over the feature axis, core/activations.py) before the
+    dot — the jnp formulation of ``kernels.qmatmul_a8``, so ``--a-bits 8``
+    serving numerics match the W4A8/W8A8 kernel regime and the BOPs
+    accounting's b_a term describes what was actually computed.  Dense
+    (unquantized) weights and serve_a_bits >= 32 fall through to ``mm``.
+    """
+    bits = opts.serve_a_bits
+    if bits >= 32 or not is_qweight(w):
+        return mm(x, w)
+    from repro.core import activations as act
+    codes, scale = act.quant_act(x, bits, act.act_scale(x, bits, axis=-1))
+    a = codes.astype(jnp.float32) * scale
+    return jnp.dot(a, materialize(w, jnp.float32),
+                   preferred_element_type=jnp.float32).astype(x.dtype)
 
 
 def _quantize_leaf_empirical(leaf, bits: int, stacked: bool):
@@ -297,11 +323,11 @@ def _attn_block(x, lp, cfg: ArchConfig, opts: ModelOpts, positions, window,
     B, S, d = x.shape
     H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     h = _norm(x, lp["attn_norm"], cfg)
-    q = shard_act(mm(h, lp["wq"]).reshape(B, S, H, hd),
+    q = shard_act(mm_a(h, lp["wq"], opts).reshape(B, S, H, hd),
                   opts, "dp", None, "tp", None)
-    k = shard_act(mm(h, lp["wk"]).reshape(B, S, KV, hd),
+    k = shard_act(mm_a(h, lp["wk"], opts).reshape(B, S, KV, hd),
                   opts, "dp", None, "tp", None)
-    v = shard_act(mm(h, lp["wv"]).reshape(B, S, KV, hd),
+    v = shard_act(mm_a(h, lp["wv"], opts).reshape(B, S, KV, hd),
                   opts, "dp", None, "tp", None)
     q = apply_rope(q, positions, cfg.rope_theta)
     k = apply_rope(k, positions, cfg.rope_theta)
@@ -324,7 +350,7 @@ def _attn_block(x, lp, cfg: ArchConfig, opts: ModelOpts, positions, window,
     else:
         o = attn.full_attention(q, k, v, pos1d, pos1d, p)
     o = shard_act(o.reshape(B, S, H * hd), opts, "dp", None, "tp")
-    o = shard_act(mm(o, lp["wo"]), opts, "dp", None, None)
+    o = shard_act(mm_a(o, lp["wo"], opts), opts, "dp", None, None)
     if cfg.post_norms:
         o = _norm(o, lp["post_attn_norm"], cfg)
     return o, kv
@@ -456,10 +482,10 @@ def _ffn_block(x, lp, cfg: ArchConfig, opts: ModelOpts):
                                 axis_name=None, act_fn=jax.nn.silu)
     else:
         act = cfg.mlp_act
-        g = shard_act(mm(h, lp["w_gate"]), opts, "dp", None, "tp")
-        u = shard_act(mm(h, lp["w_up"]), opts, "dp", None, "tp")
+        g = shard_act(mm_a(h, lp["w_gate"], opts), opts, "dp", None, "tp")
+        u = shard_act(mm_a(h, lp["w_up"], opts), opts, "dp", None, "tp")
         g = jax.nn.silu(g) if act == "silu" else jax.nn.gelu(g, approximate=True)
-        o = mm(g * u, lp["w_down"])
+        o = mm_a(g * u, lp["w_down"], opts)
     o = shard_act(o, opts, "dp", None, None)
     if cfg.post_norms:
         o = _norm(o, lp["post_mlp_norm"], cfg)
@@ -749,20 +775,30 @@ def prefill_chunk(params, cfg: ArchConfig, opts: ModelOpts, cache, tokens,
     """Chunked prefill: run one sequence's next C prompt tokens against
     (and into) the paged pool (DESIGN.md Sec. 7).
 
-    tokens       : (1, C) the chunk's token ids (right-padded; pad rows
-                   compute garbage that lands in the sink).
-    positions    : (C,) absolute positions of the chunk's rows (pad rows
-                   continue past the prompt).
-    write_pages / write_rows : (C,) pool destination of each row's KV —
-                   page id and in-page row; pad rows point at the sink
-                   page 0 (and shared pages must have been copy-on-written
-                   by the scheduler before the call).
-    block_tables : (1, n_pages) the sequence's full block-table row.
-    last_idx     : () int32 index of the prompt's last token *within the
-                   chunk* (meaningful on the final chunk — its logits seed
-                   sampling exactly like whole-prefill's ``last_idx``).
+    tokens       : (B, C) the chunks' token ids (right-padded; pad rows
+                   compute garbage that lands in the sink).  B > 1 is the
+                   *coalesced* path: one call advances several mid-prefill
+                   sequences' chunks at once (serve/engine.py batches every
+                   mid-prefill slot per step; pad rows beyond the live
+                   group are all-sink no-ops).
+    positions    : (C,) shared, or (B, C) per-sequence absolute positions
+                   of the chunk rows (pad rows continue past the prompt).
+    write_pages / write_rows : same shape as ``positions`` — pool
+                   destination of each row's KV (page id and in-page row);
+                   pad rows point at the sink page 0 (and shared pages
+                   must have been copy-on-written by the scheduler before
+                   the call).
+    block_tables : (B, n_pages) each sequence's full block-table row.
+    last_idx     : () or (B,) int32 index of each prompt's last token
+                   *within the chunk* (meaningful on the final chunk — its
+                   logits seed sampling exactly like whole-prefill's
+                   ``last_idx``).
 
-    Returns (logits (1, V) at ``last_idx``, updated pool).
+    Returns (logits (B, V) at ``last_idx``, updated pool).  Coalescing is
+    bit-exact vs B=1 calls: a row's codes depend only on that row's K/V,
+    sequences' block tables are disjoint (the shared sink page is only
+    ever read under the causal mask, contributing exact zeros), and
+    sampling folds by (seed, absolute position) — never batch shape.
 
     Each layer scatters the chunk's fresh KV (codes + stats when
     ``opts.kv_bits < 16``) into the pool *before* attending, then attends
@@ -777,42 +813,51 @@ def prefill_chunk(params, cfg: ArchConfig, opts: ModelOpts, cache, tokens,
     B, C = tokens.shape
     H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     x = _embed_tokens(params, cfg, opts, tokens)          # (B, C, d)
-    pos2d = jnp.broadcast_to(positions[None], (B, C))
+    positions = jnp.asarray(positions, jnp.int32)
+    if positions.ndim == 1:                # legacy single-sequence layout
+        positions = jnp.broadcast_to(positions[None], (B, C))
+        write_pages = jnp.broadcast_to(
+            jnp.asarray(write_pages, jnp.int32)[None], (B, C))
+        write_rows = jnp.broadcast_to(
+            jnp.asarray(write_rows, jnp.int32)[None], (B, C))
+    else:
+        write_pages = jnp.asarray(write_pages, jnp.int32)
+        write_rows = jnp.asarray(write_rows, jnp.int32)
+    last_idx = jnp.atleast_1d(jnp.asarray(last_idx, jnp.int32))
+    pos2d = positions
     windows = _window_schedule(cfg)
     quant = kvq.is_quantized_cache(cache)
-    write_pages = jnp.asarray(write_pages, jnp.int32)
-    write_rows = jnp.asarray(write_rows, jnp.int32)
 
     def body(h, inp):
         lp, window, kc = inp
         hn = _norm(h, lp["attn_norm"], cfg)
-        q = mm(hn, lp["wq"]).reshape(B, C, H, hd)
-        k = mm(hn, lp["wk"]).reshape(B, C, KV, hd)
-        v = mm(hn, lp["wv"]).reshape(B, C, KV, hd)
+        q = mm_a(hn, lp["wq"], opts).reshape(B, C, H, hd)
+        k = mm_a(hn, lp["wk"], opts).reshape(B, C, KV, hd)
+        v = mm_a(hn, lp["wv"], opts).reshape(B, C, KV, hd)
         q = apply_rope(q, pos2d, cfg.rope_theta)
         k = apply_rope(k, pos2d, cfg.rope_theta)
         p = attn.AttnParams(window=window, logit_cap=cfg.attn_logit_cap,
                             causal=True)
         kc = dict(kc)
         if quant:
-            k_st, k_mu, k_sig = kvq.quantize_kv(k[0], opts.kv_bits)
-            v_st, v_mu, v_sig = kvq.quantize_kv(v[0], opts.kv_bits)
+            k_st, k_mu, k_sig = kvq.quantize_kv(k, opts.kv_bits)
+            v_st, v_mu, v_sig = kvq.quantize_kv(v, opts.kv_bits)
             for name, val in (("k_codes", k_st), ("k_mu", k_mu),
                               ("k_sigma", k_sig), ("v_codes", v_st),
                               ("v_mu", v_mu), ("v_sigma", v_sig)):
                 kc[name] = kc[name].at[write_pages, write_rows].set(
                     val.astype(kc[name].dtype))
             o = attn.paged_prefill_attention_quant(q, kc, block_tables,
-                                                   positions, p,
+                                                   pos2d, p,
                                                    kv_bits=opts.kv_bits)
         else:
             kc["k"] = kc["k"].at[write_pages, write_rows].set(
-                k[0].astype(kc["k"].dtype))
+                k.astype(kc["k"].dtype))
             kc["v"] = kc["v"].at[write_pages, write_rows].set(
-                v[0].astype(kc["v"].dtype))
+                v.astype(kc["v"].dtype))
             o = attn.paged_prefill_attention(q, kc["k"], kc["v"],
-                                             block_tables, positions, p)
-        o = mm(o.reshape(B, C, H * hd), lp["wo"])
+                                             block_tables, pos2d, p)
+        o = mm_a(o.reshape(B, C, H * hd), lp["wo"], opts)
         if cfg.post_norms:
             o = _norm(o, lp["post_attn_norm"], cfg)
         h = h + o
@@ -822,7 +867,7 @@ def prefill_chunk(params, cfg: ArchConfig, opts: ModelOpts, cache, tokens,
     x, cache_new = jax.lax.scan(
         body, x, (params["layers"], windows, dict(cache)))
     x = _norm_final(x, params, cfg)
-    last = x[:, jnp.clip(last_idx, 0, C - 1)]             # (B, d)
+    last = x[jnp.arange(B), jnp.clip(last_idx, 0, C - 1)]  # (B, d)
     logits = jnp.dot(last, materialize(_head_weight(params, cfg), last.dtype),
                      preferred_element_type=jnp.float32)
     logits = softcap(logits, cfg.final_logit_cap)
@@ -864,9 +909,9 @@ def decode_step(params, cfg: ArchConfig, opts: ModelOpts, cache, tokens,
     def body(h, inp):
         lp, window, kc = inp
         hn = _norm(h, lp["attn_norm"], cfg)
-        q = mm(hn, lp["wq"]).reshape(B, 1, H, hd)
-        k = mm(hn, lp["wk"]).reshape(B, 1, KV, hd)
-        v = mm(hn, lp["wv"]).reshape(B, 1, KV, hd)
+        q = mm_a(hn, lp["wq"], opts).reshape(B, 1, H, hd)
+        k = mm_a(hn, lp["wk"], opts).reshape(B, 1, KV, hd)
+        v = mm_a(hn, lp["wv"], opts).reshape(B, 1, KV, hd)
         q = apply_rope(q, pos2d, cfg.rope_theta)
         k = apply_rope(k, pos2d, cfg.rope_theta)
         p = attn.AttnParams(window=window, logit_cap=cfg.attn_logit_cap,
@@ -896,7 +941,7 @@ def decode_step(params, cfg: ArchConfig, opts: ModelOpts, cache, tokens,
             kc["v"] = kc["v"].at[barange, positions].set(
                 v[:, 0].astype(kc["v"].dtype))
             o = attn.decode_attention(q, kc["k"], kc["v"], positions, p)
-        o = mm(o.reshape(B, 1, H * hd), lp["wo"])
+        o = mm_a(o.reshape(B, 1, H * hd), lp["wo"], opts)
         if cfg.post_norms:
             o = _norm(o, lp["post_attn_norm"], cfg)
         h = h + o

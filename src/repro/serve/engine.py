@@ -77,6 +77,11 @@ from repro.serve.scheduler import (Request, SamplingParams, ScheduledSeq,
 __all__ = ["EngineConfig", "Engine", "Request", "SamplingParams",
            "RequestOutput"]
 
+# smallest bucketed decode batch: engines at or below this never bucket
+# (one compiled decode shape, exactly the pre-bucketing behavior), so the
+# small-slot engines tests and model checking build stay single-graph
+_DECODE_BUCKET_MIN = 8
+
 
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
@@ -92,6 +97,14 @@ class EngineConfig:
     # that preemption only triggers when the pool is deliberately shrunk.
     kv_bits: int = 16           # 8/4 => k-quantile-coded KV pages (paged
                                 #   mode only; models/kv_cache.py)
+    a_bits: int = 32            # 8 => serve activations through the real
+                                #   per-token int8 codec on quantized
+                                #   matmuls (lm.mm_a, the qmatmul_a8
+                                #   regime) in BOTH prefill and decode;
+                                #   32 = full-precision activations.
+                                #   Surfaces in the metrics-snapshot meta,
+                                #   so traceview's BOPs attribution prices
+                                #   the precision actually served.
     pool_bytes: Optional[int] = None
     # byte budget for the page pool (alternative to total_pages): the pool
     # holds pool_bytes // page_kv_bytes(cfg, page_size, kv_bits) pages —
@@ -106,6 +119,22 @@ class EngineConfig:
     # pages per prefill chunk (paged mode): prompts prefill chunk-by-chunk
     # interleaved with decode steps instead of one whole padded prefill.
     # None with prefix_cache=True defaults to 1 page per chunk.
+    coalesce_prefill: bool = True
+    # batch every mid-prefill slot's next chunk into ONE prefill_chunk
+    # call per engine step (padded to a power-of-two batch) instead of a
+    # B=1 call per slot.  Bit-exact either way (pinned in tests; the
+    # ``prefill_chunk_calls_saved`` counter tallies the coalesced calls);
+    # False keeps the sequential path for A/B.
+    bucket_decode: bool = True
+    # paged mode: run the decode step at the power-of-two bucket of the
+    # *active* slot count (floor 8, cap max_slots) instead of always at
+    # max_slots — active rows are gathered into the bucket, pad rows
+    # write the sink page.  A drained 43-slot pool decoding 5 stragglers
+    # otherwise pays the full 43-row step (the fixed-shape padding tax
+    # the kv4 equal-HBM sweep exposes).  Bit-exact either way: sampling
+    # folds on (seed, position), never slot or batch (pinned in tests).
+    # Engines with max_slots <= 8 never bucket (one compiled shape, as
+    # before); larger engines compile O(log max_slots/8) decode graphs.
     checkify: bool = False
     # opt-in debug sanitizer (OFF by default — it forces a host sync and
     # error bookkeeping per step): wraps every jitted step with
@@ -193,6 +222,9 @@ class Engine:
                              "paged cache")
         if ec.prefill_chunk is not None and ec.prefill_chunk < 1:
             raise ValueError("prefill_chunk must be >= 1 page")
+        if ec.a_bits != 32 and not 2 <= ec.a_bits <= 8:
+            raise ValueError("a_bits must be 32 (off) or 2..8 (the int8 "
+                             f"activation codec); got {ec.a_bits}")
         self.cfg, self.ec = cfg, ec
         self.paged = ec.cache_mode == "paged"
         self.chunked = self.paged and (ec.prefix_cache
@@ -200,7 +232,8 @@ class Engine:
         self.chunk_tokens = (ec.prefill_chunk or 1) * ec.page_size \
             if self.paged else 0
         self.opts = dataclasses.replace(opts, remat=False,
-                                        kv_bits=ec.kv_bits)
+                                        kv_bits=ec.kv_bits,
+                                        serve_a_bits=ec.a_bits)
         self.params = params
         cache_dtype = jnp.float32 if opts.compute_dtype == jnp.float32 \
             else jnp.bfloat16
@@ -232,6 +265,7 @@ class Engine:
         self._slots: dict[int, Sequence] = {}        # active slot -> seq
         self._prefilling: dict[int, Sequence] = {}   # mid-chunked-prefill
         self.n_decode_steps = 0
+        self.n_bucketed_steps = 0   # decode steps run below max_slots
         self.n_prefill_calls = 0
         self.n_prefill_tokens = 0   # prefill *work* (resumes re-pay)
         self.n_prompt_tokens = 0    # unique prompt tokens (first admit only)
@@ -269,6 +303,10 @@ class Engine:
             "prefill_step_tokens",
             help="prompt tokens run while decode slots were active "
             "(chunked-prefill interleaving)")
+        self._m_chunk_saved = reg.counter(
+            "prefill_chunk_calls_saved",
+            help="B=1 prefill_chunk calls avoided by coalescing the "
+            "step's mid-prefill slots into one batched call")
         reg.counter("requests_submitted")
         for reason in ("stop", "length", "evicted"):
             reg.counter(f"requests_finished_{reason}")
@@ -405,6 +443,7 @@ class Engine:
         """Zero perf counters (e.g. after a compile-warmup request); the
         jit caches and slot state are untouched."""
         self.n_decode_steps = 0
+        self.n_bucketed_steps = 0
         self.n_prefill_calls = 0
         self.n_prefill_tokens = 0
         self.n_prompt_tokens = 0
@@ -438,22 +477,24 @@ class Engine:
         out = {k: reg.counter(k).value for k in (
             "preemptions", "cache_lookups", "cache_hits",
             "cache_hit_tokens", "cache_hit_pages", "cow_copies",
-            "cache_evictions")}
+            "cache_evictions", "prefill_chunk_calls_saved")}
         out["cached_pages"] = self.scheduler.cached_pages
         return out
 
     def config_meta(self) -> dict:
         """Engine-side facts for the metrics snapshot ``meta`` block (the
         traceview attribution pass reconstructs cost models from these;
-        the driver adds what only it knows — w_bits, a_bits, dist)."""
+        the driver adds what only it knows — w_bits, dist)."""
         ec, cfg = self.ec, self.cfg
         meta = {
             "arch": cfg.name, "family": cfg.family,
             "cache_mode": ec.cache_mode, "kv_bits": ec.kv_bits,
+            "a_bits": ec.a_bits,
             "page_size": ec.page_size, "max_slots": ec.max_slots,
             "max_len": ec.max_len, "prefill_batch": ec.prefill_batch,
             "prefix_cache": ec.prefix_cache,
             "prefill_chunk": ec.prefill_chunk,
+            "bucket_decode": ec.bucket_decode,
             "telemetry": ec.telemetry,
         }
         if self.paged:
@@ -598,81 +639,129 @@ class Engine:
             self._cache = self._copy_pages(self._cache, jnp.asarray(src),
                                            jnp.asarray(dst))
 
-    def _advance_prefill(self, slot: int) -> List[RequestOutput]:
-        """Run one prompt chunk for a mid-prefill sequence.  The final
-        chunk samples the first token (folded at the prompt's last
-        position, exactly like whole prefill) and activates the slot."""
+    def _advance_prefill_group(self, slots: List[int]) -> List[RequestOutput]:
+        """Run one prompt chunk for a GROUP of mid-prefill sequences in a
+        single batched ``prefill_chunk`` call (batch padded to a power of
+        two; pad rows write only the sink page).  The final chunk of each
+        sequence samples its first token (folded at the prompt's last
+        position, exactly like whole prefill) and activates the slot.
+
+        Coalescing is bit-exact vs one B=1 call per slot: rows' codes
+        depend only on their own K/V, block tables are disjoint, and
+        sample keys fold by (seed, position) — the
+        ``prefill_chunk_calls_saved`` counter tallies the saved calls.
+        """
         tele = self.telemetry
         t0 = tele.clock() if tele.enabled else 0.0
-        seq = self._prefilling[slot]
-        prompt = seq.full_prompt
-        a = seq.prefill_progress
-        b = min(a + self.chunk_tokens, prompt.size)
-        # shared pages this chunk writes into must be copied first
-        for vslot, vseq in self.scheduler.prepare_chunk_writes(slot, a, b):
-            tele.instant("preempt", track="requests",
-                         tid=vseq.request.uid,
-                         args={"by": seq.request.uid, "cause": "cow"})
-            self._clear_slot(vslot)
-        self._apply_cow()
+        # shared pages each chunk writes into must be copied first; a COW
+        # preemption triggered by one slot can evict a peer from the group
+        bounds: dict[int, tuple] = {}
+        for slot in slots:
+            if slot not in self._prefilling:
+                continue
+            seq = self._prefilling[slot]
+            a = seq.prefill_progress
+            b = min(a + self.chunk_tokens, seq.full_prompt.size)
+            for vslot, vseq in self.scheduler.prepare_chunk_writes(
+                    slot, a, b):
+                tele.instant("preempt", track="requests",
+                             tid=vseq.request.uid,
+                             args={"by": seq.request.uid, "cause": "cow"})
+                self._clear_slot(vslot)
+            # apply per slot (not once for the group): a later prepare may
+            # preempt an earlier slot and recycle its fresh COW dst pages,
+            # so batching the pairs could alias two copies onto one dst
+            self._apply_cow()
+            bounds[slot] = (a, b)
+        live = [s for s in slots if s in self._prefilling and s in bounds]
+        if not live:
+            return []
+        G = len(live)
+        Bp = 1                              # power-of-two batch bucket:
+        while Bp < G:                       # compile count stays O(log
+            Bp *= 2                         # max_slots), not O(traffic)
         C = self.chunk_tokens
-        valid = b - a
-        toks = np.zeros((1, C), np.int32)
-        toks[0, :valid] = prompt[a:b]
-        positions = (a + np.arange(C)).astype(np.int32)
         page = self.ec.page_size
-        row = np.asarray(self.scheduler.block_tables[slot])
-        write_pages = np.zeros((C,), np.int32)   # pad rows -> sink page 0
-        write_rows = np.zeros((C,), np.int32)
-        write_pages[:valid] = row[positions[:valid] // page]
-        write_rows[:valid] = positions[:valid] % page
-        sp = seq.request.sampling
+        tables_all = np.asarray(self.scheduler.block_tables)
+        toks = np.zeros((Bp, C), np.int32)
+        positions = np.zeros((Bp, C), np.int32)
+        write_pages = np.zeros((Bp, C), np.int32)  # pad rows -> sink page 0
+        write_rows = np.zeros((Bp, C), np.int32)
+        tables = np.zeros((Bp, tables_all.shape[1]), np.int32)
+        last_idx = np.zeros((Bp,), np.int32)
+        last_pos = np.zeros((Bp,), np.int32)
+        temps = np.zeros((Bp,), np.float32)
+        topks = np.zeros((Bp,), np.int32)
+        seeds = np.zeros((Bp,), np.int32)
+        n_valid = 0
+        for i, slot in enumerate(live):
+            seq = self._prefilling[slot]
+            prompt = seq.full_prompt
+            a, b = bounds[slot]
+            valid = b - a
+            n_valid += valid
+            toks[i, :valid] = prompt[a:b]
+            positions[i] = a + np.arange(C)
+            row = tables_all[slot]
+            write_pages[i, :valid] = row[positions[i, :valid] // page]
+            write_rows[i, :valid] = positions[i, :valid] % page
+            tables[i] = row
+            sp = seq.request.sampling
+            last_idx[i] = valid - 1
+            last_pos[i] = prompt.size - 1
+            temps[i], topks[i], seeds[i] = (sp.temperature, sp.top_k,
+                                            sp.seed)
         tok, self._cache = self._chunk_step(
             self.params, self._cache, jnp.asarray(toks),
             jnp.asarray(positions), jnp.asarray(write_pages),
-            jnp.asarray(write_rows), jnp.asarray(row[None]),
-            jnp.asarray(valid - 1, jnp.int32),
-            jnp.asarray([prompt.size - 1], jnp.int32),
-            jnp.asarray([sp.temperature], jnp.float32),
-            jnp.asarray([sp.top_k], jnp.int32),
-            jnp.asarray([sp.seed], jnp.int32))
+            jnp.asarray(write_rows), jnp.asarray(tables),
+            jnp.asarray(last_idx), jnp.asarray(last_pos),
+            jnp.asarray(temps), jnp.asarray(topks), jnp.asarray(seeds))
         self.n_prefill_calls += 1
-        self.n_prefill_tokens += valid
+        self.n_prefill_tokens += n_valid
+        if G > 1:
+            self._m_chunk_saved.inc(G - 1)
+        tok_np = np.asarray(tok)
         if tele.enabled:
             t1 = tele.clock()
             tele.observe(self._m_chunk_call, t1 - t0)
             tele.tracer.add_span("prefill_chunk", t0, t1,
-                                 args={"uid": seq.request.uid,
-                                       "tokens": valid})
+                                 args={"batch": G, "tokens": n_valid})
             if self._slots:
                 # decode was live while this chunk ran: interleaved
                 # prefill work, the decode-stall currency
-                self._m_tok_prefill_step.inc(valid)
-        seq.prefill_progress = b
-        if b < prompt.size:
-            return []
-        # final chunk: publish the full prompt pages, activate the slot
-        self.scheduler.on_prefill_complete(slot)
-        seq.prefill_progress = None
-        del self._prefilling[slot]
-        first = int(np.asarray(tok)[0])
-        if seq.first_token_time is None:
-            seq.first_token_time = time.perf_counter()
-            self.n_prompt_tokens += int(seq.request.prompt.size)
-            tele.observe(self._m_ttft, seq.first_token_time
-                         - (seq.request.arrival_time
-                            or seq.first_token_time))
-        seq.generated.append(first)
-        self._slots[slot] = seq
-        self._positions[slot] = prompt.size
-        self._cur_tok[slot] = first
-        self._temps[slot] = sp.temperature
-        self._topks[slot] = sp.top_k
-        self._seeds[slot] = sp.seed
-        done = self._finish_reason(slot)
-        if done:
-            return [self._complete(slot, done)]
-        return []
+                self._m_tok_prefill_step.inc(n_valid)
+        finished: List[RequestOutput] = []
+        for i, slot in enumerate(live):
+            seq = self._prefilling[slot]
+            prompt = seq.full_prompt
+            _, b = bounds[slot]
+            seq.prefill_progress = b
+            if b < prompt.size:
+                continue
+            # final chunk: publish the full prompt pages, activate the slot
+            self.scheduler.on_prefill_complete(slot)
+            seq.prefill_progress = None
+            del self._prefilling[slot]
+            first = int(tok_np[i])
+            sp = seq.request.sampling
+            if seq.first_token_time is None:
+                seq.first_token_time = time.perf_counter()
+                self.n_prompt_tokens += int(seq.request.prompt.size)
+                tele.observe(self._m_ttft, seq.first_token_time
+                             - (seq.request.arrival_time
+                                or seq.first_token_time))
+            seq.generated.append(first)
+            self._slots[slot] = seq
+            self._positions[slot] = prompt.size
+            self._cur_tok[slot] = first
+            self._temps[slot] = sp.temperature
+            self._topks[slot] = sp.top_k
+            self._seeds[slot] = sp.seed
+            done = self._finish_reason(slot)
+            if done:
+                finished.append(self._complete(slot, done))
+        return finished
 
     # -- decode ------------------------------------------------------------
 
@@ -680,24 +769,53 @@ class Engine:
         tele = self.telemetry
         t0 = tele.clock() if tele.enabled else 0.0
         n_active = len(self._slots)
+        row_of = None
         if self.paged:
             self._util_tokens += self.scheduler.tokens_in_use
             self._util_page_tokens += (self.scheduler.pages_in_use
                                        * self.ec.page_size)
-            block_tables = self.scheduler.block_tables
-            if self._prefilling:
-                # mid-prefill slots are inactive in the decode step, but
-                # it still scatters their (zero) row-0 write — point those
-                # rows at the sink so real (possibly shared) pages are
-                # never touched
-                block_tables = block_tables.copy()
-                block_tables[list(self._prefilling)] = 0
-            next_tok, self._cache = self._decode_step(
-                self.params, self._cache, jnp.asarray(self._cur_tok),
-                jnp.asarray(self._positions),
-                jnp.asarray(block_tables),
-                jnp.asarray(self._temps), jnp.asarray(self._topks),
-                jnp.asarray(self._seeds))
+            active = sorted(self._slots)
+            Bb = self._decode_bucket(len(active))
+            if self.ec.bucket_decode and active and Bb < self.ec.max_slots:
+                # gather the active rows into the bucket; pad rows carry
+                # zero block tables, so their scatter lands in the sink
+                # page exactly like an inactive slot's in the full batch
+                bt = np.asarray(self.scheduler.block_tables)
+                rows = np.asarray(active, np.int32)
+                toks = np.zeros(Bb, self._cur_tok.dtype)
+                pos = np.zeros(Bb, self._positions.dtype)
+                tabs = np.zeros((Bb, bt.shape[1]), bt.dtype)
+                temps = np.zeros(Bb, self._temps.dtype)
+                topks = np.zeros(Bb, self._topks.dtype)
+                seeds = np.zeros(Bb, self._seeds.dtype)
+                n = rows.size
+                toks[:n] = self._cur_tok[rows]
+                pos[:n] = self._positions[rows]
+                tabs[:n] = bt[rows]
+                temps[:n] = self._temps[rows]
+                topks[:n] = self._topks[rows]
+                seeds[:n] = self._seeds[rows]
+                next_tok, self._cache = self._decode_step(
+                    self.params, self._cache, jnp.asarray(toks),
+                    jnp.asarray(pos), jnp.asarray(tabs), jnp.asarray(temps),
+                    jnp.asarray(topks), jnp.asarray(seeds))
+                row_of = {slot: i for i, slot in enumerate(active)}
+                self.n_bucketed_steps += 1
+            else:
+                block_tables = self.scheduler.block_tables
+                if self._prefilling:
+                    # mid-prefill slots are inactive in the decode step,
+                    # but it still scatters their (zero) row-0 write —
+                    # point those rows at the sink so real (possibly
+                    # shared) pages are never touched
+                    block_tables = block_tables.copy()
+                    block_tables[list(self._prefilling)] = 0
+                next_tok, self._cache = self._decode_step(
+                    self.params, self._cache, jnp.asarray(self._cur_tok),
+                    jnp.asarray(self._positions),
+                    jnp.asarray(block_tables),
+                    jnp.asarray(self._temps), jnp.asarray(self._topks),
+                    jnp.asarray(self._seeds))
         else:
             next_tok, self._cache = self._decode_step(
                 self.params, self._cache, jnp.asarray(self._cur_tok),
@@ -721,13 +839,22 @@ class Engine:
         finished: List[RequestOutput] = []
         for slot in list(self._slots):
             seq = self._slots[slot]
-            seq.generated.append(int(next_np[slot]))
+            tok = next_np[slot if row_of is None else row_of[slot]]
+            seq.generated.append(int(tok))
             self._positions[slot] += 1
-            self._cur_tok[slot] = next_np[slot]
+            self._cur_tok[slot] = tok
             done = self._finish_reason(slot)
             if done:
                 finished.append(self._complete(slot, done))
         return finished
+
+    def _decode_bucket(self, n_active: int) -> int:
+        """Power-of-two decode batch bucket for an active-slot count:
+        floor ``_DECODE_BUCKET_MIN``, cap ``max_slots``."""
+        b = _DECODE_BUCKET_MIN
+        while b < n_active:
+            b *= 2
+        return min(b, self.ec.max_slots)
 
     def _finish_reason(self, slot: int) -> Optional[str]:
         seq = self._slots[slot]
@@ -820,10 +947,15 @@ class Engine:
             # n_prefilling * chunk_tokens (the chunk size is the policy
             # knob), while a whole admission wave advances together
             # instead of serializing one sequence per step
-            for slot in sorted(self._prefilling,
-                               key=lambda s: self._prefilling[s].order):
-                if slot in self._prefilling:  # not preempted by a peer
-                    finished.extend(self._advance_prefill(slot))
+            order = sorted(self._prefilling,
+                           key=lambda s: self._prefilling[s].order)
+            if self.ec.coalesce_prefill:
+                # ...and the whole wave shares ONE batched chunk call
+                finished.extend(self._advance_prefill_group(order))
+            else:
+                for slot in order:
+                    if slot in self._prefilling:  # not preempted by a peer
+                        finished.extend(self._advance_prefill_group([slot]))
         if self.paged and self._slots:
             for slot, seq in self.scheduler.ensure_decode_pages(
                     writing=set(self._slots)):

@@ -200,6 +200,29 @@ class TestLintRules:
         bare = "def f(x):\n    assert x > 0\n    return x\n"
         assert lint.lint_source(bare, SPATH) == []
 
+    def test_uq110_dot_without_preferred_type_fires(self):
+        src = ("import jax\n"
+               "import jax.numpy as jnp\n"
+               "def kern(a_ref, w_ref, o_ref):\n"
+               "    o_ref[...] = jnp.dot(a_ref[...], w_ref[...])\n"
+               "    s = jax.lax.dot_general(a_ref[...], w_ref[...],\n"
+               "        dimension_numbers=(((1,), (0,)), ((), ())))\n")
+        fs = lint.lint_source(src, KPATH)
+        assert rules(fs) == ["UQ110", "UQ110"]
+        assert "preferred_element_type" in fs[0].message
+
+    def test_uq110_silent_with_preferred_type_or_outside_kernels(self):
+        good = ("import jax.numpy as jnp\n"
+                "def kern(a_ref, w_ref, o_ref):\n"
+                "    o_ref[...] = jnp.dot(a_ref[...], w_ref[...],\n"
+                "        preferred_element_type=jnp.float32)\n")
+        assert lint.lint_source(good, KPATH) == []
+        # models/ dots are the jnp reference path, not MXU kernel tiles
+        bare = ("import jax.numpy as jnp\n"
+                "def f(a, w):\n"
+                "    return jnp.dot(a, w)\n")
+        assert lint.lint_source(bare, MPATH) == []
+
     def test_suppression_comment(self):
         src = ("import jax.numpy as jnp\n"
                "def f(x):\n"
@@ -240,7 +263,9 @@ class TestKernelAudit:
         names = {k["kernel"] for k in info["kernels"]}
         for expect in ("qmatmul[w4]", "qmatmul_lut[w4]", "paged_attn[kv8]",
                        "paged_attn[kv4]", "kquantile[quantize]",
-                       "uniq_noise[host]"):
+                       "uniq_noise[host]", "qmatmul[prod_decode_blocks]",
+                       "qmatmul_lut[prod_blocks]", "paged_attn[kv4_splitk]",
+                       "paged_attn[kv8_splitk]", "paged_attn[prod_splitk]"):
             assert expect in names
 
     def test_rejects_overflowing_index_map(self):

@@ -450,3 +450,131 @@ def test_chunked_prefill_matches_whole(chunk_pages, kv_bits, rng, cpu_opts):
         # partial tail page: only the 4 written rows are comparable
         np.testing.assert_array_equal(w[:, 3, :4], c[:, 3, :4],
                                       err_msg=f"{name} tail")
+
+
+# ---------------------------------------------------------------------------
+# A8 serving path (EngineConfig.a_bits -> lm.mm_a per-token codec)
+# ---------------------------------------------------------------------------
+
+def test_engine_a8_matches_generate_greedy(rng, cpu_opts):
+    """``a_bits=8`` serves a real per-token int8 codec on every quantized
+    matmul (lm.mm_a).  The engine's batched-prefill + slot-decode stream
+    must reproduce the legacy host-loop generate path running with the
+    same ``serve_a_bits`` exactly — scheduling must not perturb the
+    quantized numerics (per-row absmax scales see only their own row)."""
+    import dataclasses
+    cfg = cb.get_smoke("granite_3_8b")
+    params = model.init(rng, cfg)
+    sc = serve_lib.ServeConfig(w_bits=4)
+    params = serve_lib.prepare_params(params, sc)
+    a8 = dataclasses.replace(cpu_opts, serve_a_bits=8)
+    B, S0, n_new = 3, 10, 8
+    toks = jax.random.randint(jax.random.PRNGKey(11), (B, S0), 0, cfg.vocab)
+    ref = np.asarray(serve_lib.generate(params, cfg, a8, sc, toks, n_new))
+    eng = Engine(params, cfg, cpu_opts,
+                 EngineConfig(max_slots=B, max_len=S0 + n_new + 4,
+                              prefill_batch=B, min_bucket=8, a_bits=8))
+    assert eng.opts.serve_a_bits == 8
+    assert eng.config_meta()["a_bits"] == 8
+    outs = eng.generate([Request(uid=i, prompt=np.asarray(toks[i]),
+                                 sampling=SamplingParams(max_new_tokens=n_new))
+                         for i in range(B)])
+    got = np.stack([o.token_ids for o in outs])
+    np.testing.assert_array_equal(got, ref)
+
+
+def test_engine_a8_sampled_batch_invariance(rng, cpu_opts):
+    """A sampled A8 stream is invariant to decode batch shape: the
+    per-token activation scale reduces over the feature axis only, so
+    co-tenant rows and slot padding cannot leak into a sequence's
+    logits, and sample keys fold on (seed, position)."""
+    cfg = cb.get_smoke("granite_3_8b")
+    params = model.init(rng, cfg)
+    params = serve_lib.prepare_params(params, serve_lib.ServeConfig(w_bits=4))
+    reqs = [_req(i, 6 + 2 * i, vocab=cfg.vocab, max_new_tokens=6,
+                 temperature=0.8, seed=40 + i) for i in range(3)]
+    def run(slots):
+        eng = Engine(params, cfg, cpu_opts,
+                     EngineConfig(max_slots=slots, max_len=32,
+                                  prefill_batch=slots, min_bucket=8,
+                                  a_bits=8))
+        return {o.uid: o.token_ids for o in eng.generate(
+            [_req(r.uid, r.prompt.size, vocab=cfg.vocab,
+                  max_new_tokens=r.sampling.max_new_tokens,
+                  temperature=r.sampling.temperature,
+                  seed=40 + r.uid) for r in reqs])}
+    assert run(3) == run(1)
+
+
+def test_engine_rejects_bad_a_bits(rng, cpu_opts):
+    cfg = cb.get_smoke("granite_3_8b")
+    params = model.init(rng, cfg)
+    with pytest.raises(ValueError):
+        Engine(params, cfg, cpu_opts,
+               EngineConfig(max_slots=2, max_len=32, a_bits=12))
+
+
+# ---------------------------------------------------------------------------
+# Coalesced (batched) chunk prefill: A/B bit-exactness vs sequential B=1
+# ---------------------------------------------------------------------------
+
+def test_coalesced_chunk_prefill_ab_exact(rng, cpu_opts):
+    """One batched ``prefill_chunk`` call per engine step must be
+    bit-exact vs the sequential per-slot path: a row's KV codes depend
+    only on that row's K/V, block tables are disjoint, and the shared
+    sink page is only read under the causal mask.  The coalesced run
+    must also actually save calls (the telemetry counter and the
+    prefill-call count pin the batching happened)."""
+    cfg = cb.get_smoke("granite_3_8b")
+    params = model.init(rng, cfg)
+    params = serve_lib.prepare_params(params, serve_lib.ServeConfig(w_bits=4))
+    # 3 requests, prompts spanning 3 pages at page_size 8 with
+    # prefill_chunk=1: all three slots sit mid-prefill simultaneously
+    reqs = [(i, 17 + 2 * i, 0.0 if i % 2 == 0 else 0.7) for i in range(3)]
+    def run(coalesce):
+        eng = Engine(params, cfg, cpu_opts,
+                     EngineConfig(max_slots=3, max_len=48, prefill_batch=3,
+                                  min_bucket=8, cache_mode="paged",
+                                  page_size=8, prefill_chunk=1,
+                                  coalesce_prefill=coalesce))
+        outs = eng.generate([_req(uid, n, vocab=cfg.vocab, max_new_tokens=6,
+                                  temperature=t, seed=60 + uid)
+                             for uid, n, t in reqs])
+        return ({o.uid: o.token_ids for o in outs}, eng.n_prefill_calls,
+                eng.stats()["prefill_chunk_calls_saved"])
+    toks_b, calls_b, saved_b = run(True)
+    toks_s, calls_s, saved_s = run(False)
+    assert toks_b == toks_s
+    assert saved_s == 0
+    assert saved_b > 0
+    assert calls_b + saved_b == calls_s
+
+
+def test_bucket_decode_ab_exact(rng, cpu_opts):
+    """Bucketed decode (active slots gathered into a power-of-two batch)
+    must be token-exact vs the fixed max_slots-shape step: sampling
+    folds on (seed, position), never slot or batch, and pad rows only
+    ever write the sink page.  18 requests through 12 slots leave a
+    6-request second wave, so the bucketed run really does take the
+    compacted path (pinned by the step counter)."""
+    cfg = cb.get_smoke("granite_3_8b")
+    params = model.init(rng, cfg)
+    params = serve_lib.prepare_params(params, serve_lib.ServeConfig(w_bits=4))
+    reqs = [_req(uid, 10 + (uid % 5), vocab=cfg.vocab, max_new_tokens=5,
+                 temperature=0.0 if uid % 2 == 0 else 0.8, seed=80 + uid)
+            for uid in range(18)]
+
+    def run(bucket):
+        eng = Engine(params, cfg, cpu_opts,
+                     EngineConfig(max_slots=12, max_len=32, prefill_batch=4,
+                                  min_bucket=8, cache_mode="paged",
+                                  page_size=8, bucket_decode=bucket))
+        outs = eng.generate([Request(uid=r.uid, prompt=r.prompt.copy(),
+                                     sampling=r.sampling) for r in reqs])
+        return {o.uid: o.token_ids for o in outs}, eng.n_bucketed_steps
+
+    toks_b, bucketed = run(True)
+    toks_f, full_only = run(False)
+    assert toks_b == toks_f
+    assert bucketed > 0
+    assert full_only == 0

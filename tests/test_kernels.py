@@ -293,3 +293,129 @@ def test_paged_quant_attention_kernel_matches_ref(kv_bits, page):
                                                   interpret=True)
         np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
                                    atol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# Schedule parity matrix: the batch-persistent qmatmul grid revisits each
+# weight tile across M-steps and sums per-K-split partials in the wrapper
+# epilogue, so correctness depends on (block shape x array shape) geometry,
+# not just dtype.  Pin every tuned config the serving stack picks
+# (TUNED_BLOCKS) plus deliberately non-divisible M/K/N (exercising
+# _pad_operands zero-fill + the final [:M, :N] crop) against the jnp
+# reference in interpret mode.
+
+_BLOCK_MATRIX = [
+    (32, 512, 512),    # TUNED_BLOCKS["decode"]
+    (256, 512, 256),   # TUNED_BLOCKS["prefill"]
+    (16, 64, 32),      # tiny blocks: every axis has a ragged final tile
+]
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+@pytest.mark.parametrize("mkn", [(48, 384, 192), (33, 520, 96)])
+@pytest.mark.parametrize("blocks", _BLOCK_MATRIX)
+def test_qmatmul_block_matrix(bits, mkn, blocks):
+    M, K, N = mkn
+    bm, bk, bn = blocks
+    a = jax.random.normal(jax.random.PRNGKey(1), (M, K)) * 0.1
+    w = jax.random.normal(jax.random.PRNGKey(2), (K, N)) * 0.03
+    mu = jnp.mean(w, axis=0, keepdims=True)
+    sd = jnp.std(w, axis=0, keepdims=True)
+    wp = ops.quantize_weights(w[None], mu[None], sd[None], bits=bits,
+                              use_pallas=False)[0]
+    out_r = ops.qmatmul(a, wp, mu, sd, bits=bits, use_pallas=False)
+    out_k = ops.qmatmul(a, wp, mu, sd, bits=bits, use_pallas=True,
+                        interpret=True, bm=bm, bk=bk, bn=bn)
+    rel = np.abs(np.asarray(out_k) - np.asarray(out_r)) / (
+        np.abs(np.asarray(out_r)) + 1e-3)
+    assert rel.max() < 1e-3
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+@pytest.mark.parametrize("blocks", [(256, 256, 256),   # TUNED_BLOCKS["lut"]
+                                    (32, 64, 32)])     # ragged final tiles
+def test_qmatmul_lut_block_matrix(bits, blocks):
+    from repro.core import packing
+    from repro.core import quantizers as Q
+    from repro.core.distributions import EmpiricalModel
+    k = 2 ** bits
+    M, K, N = 40, 72, 48                 # non-divisible vs both configs
+    bm, bk, bn = blocks
+    a = jax.random.normal(jax.random.PRNGKey(1), (M, K)) * 0.1
+    w = jax.random.normal(jax.random.PRNGKey(2), (K, N)) ** 3 * 0.03
+    em = EmpiricalModel.fit(w)
+    codes = Q.kquantile_quantize(w, em, k, code_dtype=jnp.int32)
+    stored = packing.pack_int4(codes) if bits == 4 \
+        else (codes - 128).astype(jnp.int8)
+    lut = jnp.broadcast_to(em.level_values(k)[:, None], (k, N))
+    out_r = ops.qmatmul_lut(a, stored, lut, bits=bits, use_pallas=False)
+    out_k = ops.qmatmul_lut(a, stored, lut, bits=bits, use_pallas=True,
+                            interpret=True, bm=bm, bk=bk, bn=bn)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("mkn", [(32, 384, 192),       # decode M, ragged K/N
+                                 (17, 520, 96)])       # ragged M too
+@pytest.mark.parametrize("blocks", [(32, 512, 512),    # TUNED_BLOCKS["decode"]
+                                    (16, 128, 64)])
+def test_qmatmul_a8_block_matrix(mkn, blocks):
+    M, K, N = mkn
+    bm, bk, bn = blocks
+    a = jax.random.normal(jax.random.PRNGKey(1), (M, K)) * 0.1
+    w = jax.random.normal(jax.random.PRNGKey(2), (K, N)) * 0.03
+    mu = jnp.mean(w, axis=0, keepdims=True)
+    sd = jnp.std(w, axis=0, keepdims=True)
+    wp = ops.quantize_weights(w[None], mu[None], sd[None], bits=4,
+                              use_pallas=False)[0]
+    ac, ascale = quant_act(a, 8)
+    out_r = ops.qmatmul_a8(ac, ascale, wp, mu, sd, bits=4, use_pallas=False)
+    out_k = ops.qmatmul_a8(ac, ascale, wp, mu, sd, bits=4, use_pallas=True,
+                           interpret=True, bm=bm, bk=bk, bn=bn)
+    rel = np.abs(np.asarray(out_k) - np.asarray(out_r)) / (
+        np.abs(np.asarray(out_r)) + 1e-2)
+    assert rel.max() < 0.06  # bf16 MXU accumulation path in the kernel
+
+
+@pytest.mark.parametrize("kv_bits", [4, 8])
+@pytest.mark.parametrize("splits", [1, 2, 3, 4])
+def test_paged_quant_attention_split_matrix(kv_bits, splits):
+    """Flash-decode split-K: every split count — including counts that do
+    NOT divide n_pages (5 pages -> ragged last split, sink-padded block
+    table rows) — must reproduce the jnp reference exactly, pinning the
+    (m, l, acc) combine epilogue and the dry-split (m=-inf, l=0) case."""
+    from repro.kernels import paged_attn
+    from repro.models import attention as attn
+    from repro.models import kv_cache as kvq
+    B, page, n_pages, KV, G, hd = 3, 4, 5, 2, 2, 16
+    S, H = page * n_pages, KV * G
+    k = jax.random.normal(jax.random.PRNGKey(0), (B, S, KV, hd))
+    v = jax.random.normal(jax.random.PRNGKey(1), (B, S, KV, hd)) * 0.5
+    q = jax.random.normal(jax.random.PRNGKey(2), (B, 1, H, hd))
+    k_st, k_mu, k_sig = kvq.quantize_kv(k, kv_bits)
+    v_st, v_mu, v_sig = kvq.quantize_kv(v, kv_bits)
+
+    def paged(x):
+        pool = jnp.zeros((B * n_pages + 1, page) + x.shape[2:], x.dtype)
+        return pool.at[1:].set(x.reshape(B * n_pages, page, *x.shape[2:]))
+
+    cache = {"k_codes": paged(k_st), "v_codes": paged(v_st),
+             "k_mu": paged(k_mu), "k_sigma": paged(k_sig),
+             "v_mu": paged(v_mu), "v_sigma": paged(v_sig)}
+    tables = jnp.arange(1, B * n_pages + 1,
+                        dtype=jnp.int32).reshape(B, n_pages)
+    # row 0 ends at position 2: with splits >= 2 every later split is
+    # entirely masked out and must combine away as an exact no-op
+    q_pos = jnp.array([2, S // 2, S - 1], jnp.int32)
+    for window in (None, 7):
+        p = attn.AttnParams(window=window, logit_cap=30.0)
+        out_r = attn.paged_decode_attention_quant(q, cache, tables, q_pos,
+                                                  p, kv_bits=kv_bits,
+                                                  use_pallas=False)
+        out_k = paged_attn.paged_quant_attention(
+            q, cache["k_codes"], cache["k_mu"], cache["k_sigma"],
+            cache["v_codes"], cache["v_mu"], cache["v_sigma"],
+            tables, q_pos, kv_bits=kv_bits, window=window,
+            logit_cap=30.0, splits=splits, interpret=True)
+        np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                                   atol=1e-5)
